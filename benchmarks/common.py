@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: timing, workload setup, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time of fn(*args) with block_until_ready, in seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,28 @@
+"""Per-kernel microbenches (interpret mode on CPU — correctness-path timing;
+the TPU numbers come from the dry-run roofline, not from these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bucket_kselect_op, pairwise_dist_op, topk_select_op
+
+from .common import emit, time_call
+
+
+def run(q=256, c=1024, k=32):
+    rng = np.random.default_rng(0)
+    qpos = jnp.asarray(rng.uniform(0, 1000, (q, 2)), jnp.float32)
+    ppos = jnp.asarray(rng.uniform(0, 1000, (c, 2)), jnp.float32)
+    d2 = jnp.sum((qpos[:, None] - ppos[None, :]) ** 2, -1)
+    ids = jnp.tile(jnp.arange(c, dtype=jnp.int32)[None], (q, 1))
+    emit("kernels/pairwise_dist", time_call(lambda: pairwise_dist_op(qpos, ppos), iters=2),
+         f"{q}x{c}")
+    emit("kernels/bucket_kselect", time_call(lambda: bucket_kselect_op(qpos, ppos, k=k), iters=2),
+         f"{q}x{c},k={k}")
+    emit("kernels/topk_select", time_call(lambda: topk_select_op(d2, ids, k=k), iters=2),
+         f"{q}x{c},k={k}")
+
+
+if __name__ == "__main__":
+    run()

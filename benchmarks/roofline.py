@@ -1,0 +1,58 @@
+"""Roofline table from dry-run JSONL records (EXPERIMENTS.md §Roofline source).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline results/dryrun_baseline.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt_table(recs, mesh: str | None = "16x16"):
+    rows = []
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'coll_s':>10s} {'dom':>10s} {'GB/dev':>8s} {'useful':>7s}"
+    )
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} {'— skipped: ' + r['reason']}")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} ERROR {r.get('error','')[:60]}")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {}).get("bytes_per_device", 0) / 1e9
+        rows.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} {t['compute_s']:10.4f} "
+            f"{t['memory_s']:10.4f} {t['collective_s']:10.4f} {t['dominant']:>10s} "
+            f"{mem:8.1f} {t.get('useful_flops_ratio', 0):7.3f}"
+        )
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    args = argv or sys.argv[1:]
+    path = args[0] if args else "results/dryrun_baseline.jsonl"
+    recs = load(path)
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n=== mesh {mesh} ===")
+        print(fmt_table(recs, mesh))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

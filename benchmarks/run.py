@@ -1,0 +1,40 @@
+"""Benchmark runner — one function per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Each sub-bench is importable and
+has a __main__ for full-size runs; this runner uses CPU-feasible defaults.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import kernels, s1_skew, s1_treeheight, s2_vs_baseline, s3_vary_k, s3_vs_cpu
+
+    print("name,us_per_call,derived")
+    s1_treeheight.run(n_objects=30_000, ks=(8, 32), th_quads=(48, 384, 1536))
+    s1_skew.run(n_objects=30_000, hotspots=(4, 25), th_quads=(96, 384))
+    s2_vs_baseline.run_vary_n(ns=(5_000, 20_000))
+    s2_vs_baseline.run_vary_k(n=20_000, ks=(8, 64))
+    s3_vs_cpu.run(ns=(20_000,), dists=("uniform", "gaussian"))
+    s3_vary_k.run(n=20_000, ks=(8, 64), dists=("uniform",))
+    s3_vary_k.run_update_strategies(q=64, c=512, ks=(32,))
+    kernels.run(q=64, c=512, k=16)
+
+    # roofline summary (optimized defaults if recorded, else baseline)
+    res = os.path.join(os.path.dirname(__file__), "..", "results")
+    path = os.path.join(res, "dryrun_opt.jsonl")
+    if not os.path.exists(path):
+        path = os.path.join(res, "dryrun_baseline.jsonl")
+    if os.path.exists(path):
+        from benchmarks import roofline
+
+        recs = roofline.load(path)
+        print()
+        print(roofline.fmt_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

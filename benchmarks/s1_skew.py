@@ -1,0 +1,34 @@
+"""S1 / Fig. 3 right: spatial skewness (hotspot count) x th_quad optimality.
+
+Paper finding: skew raises execution time but barely moves the optimal
+th_quad range (k fixed at 32, 500K objects in the paper; scaled down here).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import build_index, knn_query_batch
+from repro.data import WorkloadConfig, MovingObjectWorkload
+
+from .common import emit, time_call
+
+
+def run(n_objects=50_000, k=32, hotspots=(4, 25, 100), th_quads=(96, 384, 1536), seed=0):
+    rows = []
+    for h in hotspots:
+        w = MovingObjectWorkload(
+            WorkloadConfig(n_objects=n_objects, distribution="gaussian", hotspots=h, seed=seed)
+        )
+        pts = jnp.asarray(w.positions())
+        qpos, qid = w.query_batch()
+        qpos, qid = jnp.asarray(qpos), jnp.asarray(qid)
+        for th in th_quads:
+            idx = build_index(pts, jnp.zeros(2), 22500.0, l_max=8, th_quad=th)
+            sec = time_call(lambda: knn_query_batch(idx, qpos, qid, k=k)[0], iters=3)
+            emit(f"s1_skew/hotspots={h}/th={th}", sec, f"{n_objects / sec:.0f} q/s")
+            rows.append((h, th, sec))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""S1 / Fig. 3 left: tree height (th_quad) x neighbours-list size k.
+
+Reproduces the paper's finding: each k has a wide optimal th_quad range; too
+deep a tree (small th_quad) pays per-leaf overhead, too flat a tree loses
+pruning power; execution time grows with k.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_index, knn_query_batch
+from repro.data import make_workload
+
+from .common import emit, time_call
+
+
+def run(n_objects=50_000, ks=(8, 32, 128), th_quads=(48, 192, 768, 3072), seed=0):
+    w = make_workload(n_objects, "uniform", seed=seed)
+    pts = jnp.asarray(w.positions())
+    qpos, qid = w.query_batch()
+    qpos, qid = jnp.asarray(qpos), jnp.asarray(qid)
+    rows = []
+    for k in ks:
+        for th in th_quads:
+            idx = build_index(pts, jnp.zeros(2), 22500.0, l_max=8, th_quad=th)
+            fn = lambda: knn_query_batch(idx, qpos, qid, k=k)[0]
+            sec = time_call(fn, warmup=1, iters=3)
+            emit(f"s1_treeheight/k={k}/th={th}", sec, f"{n_objects / sec:.0f} q/s")
+            rows.append((k, th, sec))
+    # sanity: for each k, the best th is interior or the sweep is monotone-ish
+    return rows
+
+
+if __name__ == "__main__":
+    run()

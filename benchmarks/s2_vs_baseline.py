@@ -1,0 +1,62 @@
+"""S2 / Fig. 4: K-NN_GPU (indexed pipeline) vs K-NN_BASELINE (Garcia brute force).
+
+Left plot: vary object count at k=32 — the pipeline pulls ahead as N grows.
+Right plot: vary k at fixed N — the brute-force cost is k-independent while the
+pipeline's grows, shrinking (but per the paper, not closing) the gap.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import build_index, knn_bruteforce_chunked, knn_query_batch_chunked
+from repro.data import make_workload
+
+from .common import emit, time_call
+
+
+def _setup(n, seed=0):
+    w = make_workload(n, "uniform", seed=seed)
+    pts = w.positions()
+    qpos, qid = w.query_batch()
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=8, th_quad=384)
+    return pts, qpos, qid, idx
+
+
+def run_vary_n(ns=(5_000, 20_000, 60_000), k=32):
+    rows = []
+    for n in ns:
+        pts, qpos, qid, idx = _setup(n)
+        t_pipe = time_call(
+            lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0], iters=2
+        )
+        t_bf = time_call(
+            lambda: knn_bruteforce_chunked(pts, qpos, qid, k=k, chunk=2048)[0], iters=2
+        )
+        emit(f"s2_vs_baseline/N={n}/pipeline", t_pipe, f"speedup={t_bf / t_pipe:.1f}x")
+        emit(f"s2_vs_baseline/N={n}/bruteforce", t_bf, "")
+        rows.append((n, t_pipe, t_bf))
+    return rows
+
+
+def run_vary_k(n=20_000, ks=(4, 32, 128, 256)):
+    rows = []
+    pts, qpos, qid, idx = _setup(n)
+    for k in ks:
+        t_pipe = time_call(
+            lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0], iters=2
+        )
+        t_bf = time_call(
+            lambda: knn_bruteforce_chunked(pts, qpos, qid, k=k, chunk=2048)[0], iters=2
+        )
+        emit(f"s2_vs_baseline/k={k}/pipeline", t_pipe, f"speedup={t_bf / t_pipe:.1f}x")
+        emit(f"s2_vs_baseline/k={k}/bruteforce", t_bf, "")
+        rows.append((k, t_pipe, t_bf))
+    return rows
+
+
+def run():
+    return run_vary_n(), run_vary_k()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""S3 / Fig. 6: varying k x distribution, vs the CPU kd-tree.
+
+Also benches the two result-update strategies: the paper's cached vs coalesced
+write duality collapses on TPU (DESIGN.md §3), so the TPU-meaningful contrast
+reported here is the lax.top_k merge (XLA path) vs the bucket-kselect kernel
+radius pass (Pallas path, interpret-timed on CPU — indicative only).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KDTree, build_index, knn_query_batch_chunked
+from repro.data import make_workload
+from repro.kernels import bucket_kselect_op
+
+from .common import emit, time_call
+
+CPU_SAMPLE = 500
+
+
+def run(n=20_000, ks=(4, 32, 128), dists=("uniform", "gaussian")):
+    rows = []
+    for dist in dists:
+        w = make_workload(n, dist, seed=2)
+        pts = w.positions()
+        qpos, qid = w.query_batch()
+        idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=8, th_quad=384)
+        tree = KDTree(pts, leaf_size=32)
+        for k in ks:
+            t_pipe = time_call(
+                lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0],
+                iters=2,
+            )
+            t0 = time.perf_counter()
+            tree.query_batch(qpos[:CPU_SAMPLE], k, qid[:CPU_SAMPLE])
+            t_cpu = (time.perf_counter() - t0) / CPU_SAMPLE * n
+            emit(f"s3_vary_k/{dist}/k={k}/pipeline", t_pipe, f"speedup={t_cpu / t_pipe:.1f}x")
+            rows.append((dist, k, t_pipe, t_cpu))
+    return rows
+
+
+def run_update_strategies(q=256, c=2048, ks=(32, 256)):
+    """top_k merge vs fused bucket-kselect radius (the Alabi et al. pillar)."""
+    rng = np.random.default_rng(0)
+    qpos = jnp.asarray(rng.uniform(0, 1000, (q, 2)), jnp.float32)
+    ppos = jnp.asarray(rng.uniform(0, 1000, (c, 2)), jnp.float32)
+    import jax
+
+    for k in ks:
+        d2 = jnp.sum((qpos[:, None] - ppos[None, :]) ** 2, -1)
+        t_topk = time_call(jax.jit(lambda d: jax.lax.top_k(-d, k)), d2, iters=5)
+        t_bucket = time_call(
+            lambda: bucket_kselect_op(qpos, ppos, k=k), iters=2
+        )
+        emit(f"s3_update/k={k}/lax_topk", t_topk, "")
+        emit(f"s3_update/k={k}/bucket_kselect_interpret", t_bucket, "")
+
+
+if __name__ == "__main__":
+    run()
+    run_update_strategies()

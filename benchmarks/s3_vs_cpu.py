@@ -1,0 +1,50 @@
+"""S3 / Fig. 5: K-NN_GPU vs K-NN_CPU (sequential kd-tree), varying N x skew.
+
+The CPU competitor answers a 1000-query subsample (sequential best-first
+kd-tree, leaf 32 as in the paper) and is extrapolated to the full batch —
+the paper runs FLANN on everything; our python kd-tree is the same algorithmic
+class but interpreter-bound, so the derived column reports per-query costs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KDTree, build_index, knn_query_batch_chunked
+from repro.data import make_workload
+
+from .common import emit, time_call
+
+CPU_SAMPLE = 1000
+
+
+def run(ns=(20_000, 60_000), dists=("uniform", "gaussian"), k=32):
+    rows = []
+    for dist in dists:
+        for n in ns:
+            w = make_workload(n, dist, seed=1)
+            pts = w.positions()
+            qpos, qid = w.query_batch()
+            idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=8, th_quad=384)
+            t_pipe = time_call(
+                lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0],
+                iters=2,
+            )
+            tree = KDTree(pts, leaf_size=32)
+            t0 = time.perf_counter()
+            tree.query_batch(qpos[:CPU_SAMPLE], k, qid[:CPU_SAMPLE])
+            t_cpu = (time.perf_counter() - t0) / CPU_SAMPLE * n
+            emit(
+                f"s3_vs_cpu/{dist}/N={n}/pipeline",
+                t_pipe,
+                f"speedup={t_cpu / t_pipe:.1f}x",
+            )
+            emit(f"s3_vs_cpu/{dist}/N={n}/kdtree_cpu", t_cpu, f"{t_cpu / n * 1e6:.0f} us/q")
+            rows.append((dist, n, t_pipe, t_cpu))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Batched LM serving example: prefill a prompt batch, decode with KV cache /
+recurrent state — the serve-side counterpart of the dry-run decode cells.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2_7b]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch import serve  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2_7b")
+    ap.add_argument("--tokens", type=int, default=12)
+    args = ap.parse_args()
+    serve.main([
+        "lm", "--arch", args.arch, "--smoke", "--batch", "4",
+        "--prompt-len", "16", "--tokens", str(args.tokens),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""The paper's contribution: iterated batched k-NN over moving objects, in JAX."""
+from .baseline import knn_bruteforce, knn_bruteforce_chunked
+from .cpu_ref import KDTree
+from .kselect import find_kdist
+from .pipeline import KnnStats, knn_query_batch, knn_query_batch_chunked
+from .quadtree import QuadtreeIndex, build_index, leaf_of_points, reindex_objects
+from .ticks import EngineConfig, TickEngine, TickResult
+
+__all__ = [
+    "knn_bruteforce",
+    "knn_bruteforce_chunked",
+    "KDTree",
+    "find_kdist",
+    "KnnStats",
+    "knn_query_batch",
+    "knn_query_batch_chunked",
+    "QuadtreeIndex",
+    "build_index",
+    "leaf_of_points",
+    "reindex_objects",
+    "EngineConfig",
+    "TickEngine",
+    "TickResult",
+]

@@ -1,0 +1,56 @@
+"""K-NN_BASELINE — the brute-force GPU k-NN of Garcia et al. (paper ref [4]).
+
+The paper compares against this in study S2: compute the full (Q x N) distance
+matrix and k-select each row.  On TPU the distance matrix maps naturally onto
+(query-tile x object-tile) VPU work; we chunk over queries to bound memory.
+This module doubles as the *test oracle* for the indexed pipeline.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["knn_bruteforce", "knn_bruteforce_chunked"]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn_bruteforce(points: jnp.ndarray, qpos: jnp.ndarray, qid: jnp.ndarray, k: int):
+    """(N,2) objects, (Q,2) queries, (Q,) issuer ids -> ((Q,k) ids, (Q,k) dists)."""
+    points = points.astype(jnp.float32)
+    qpos = qpos.astype(jnp.float32)
+    d2 = jnp.sum((qpos[:, None, :] - points[None, :, :]) ** 2, axis=-1)  # (Q, N)
+    ids = jnp.arange(points.shape[0], dtype=jnp.int32)
+    d2 = jnp.where(ids[None, :] == qid[:, None], jnp.inf, d2)
+    kk = min(k, points.shape[0])
+    neg, idx = jax.lax.top_k(-d2, kk)
+    dist = jnp.sqrt(-neg)
+    idx = jnp.where(jnp.isinf(dist), -1, idx.astype(jnp.int32))
+    if kk < k:  # fewer objects than requested neighbours: pad (-1, inf)
+        pad = k - kk
+        idx = jnp.concatenate([idx, jnp.full((idx.shape[0], pad), -1, jnp.int32)], 1)
+        dist = jnp.concatenate([dist, jnp.full((dist.shape[0], pad), jnp.inf)], 1)
+    return idx, dist
+
+
+def knn_bruteforce_chunked(points, qpos, qid=None, *, k: int = 32, chunk: int = 2048):
+    """Memory-bounded brute force (the S2 baseline at scale)."""
+    nq = qpos.shape[0]
+    if qid is None:
+        qid = np.full((nq,), -2, np.int32)
+    out_i, out_d = [], []
+    pts = jnp.asarray(points)
+    for lo in range(0, nq, chunk):
+        hi = min(lo + chunk, nq)
+        qp = jnp.asarray(qpos[lo:hi])
+        qi = jnp.asarray(qid[lo:hi], dtype=jnp.int32)
+        if hi - lo < chunk:
+            pad = chunk - (hi - lo)
+            qp = jnp.concatenate([qp, jnp.tile(qp[-1:], (pad, 1))])
+            qi = jnp.concatenate([qi, jnp.full((pad,), -2, jnp.int32)])
+        ii, dd = knn_bruteforce(pts, qp, qi, k)
+        out_i.append(np.asarray(ii[: hi - lo]))
+        out_d.append(np.asarray(dd[: hi - lo]))
+    return np.concatenate(out_i), np.concatenate(out_d)

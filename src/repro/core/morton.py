@@ -1,0 +1,108 @@
+"""Morton (Z-order) coding for 2-D points — the structural backbone of the paper.
+
+The paper (Sec. 4.1) fixes a maximum quadtree depth ``l_max`` and identifies every
+quadrant at any level ``l <= l_max`` by the pair ``(l, z)`` where ``z`` is the Morton
+code of the quadrant at that level.  Key properties used throughout:
+
+* ``z' = z >> 2*(l_max - l)`` maps a fine-level code to its ancestor at level ``l``.
+* Sorting points once by their ``l_max`` Morton code keeps every quadrant at every
+  level a *contiguous interval* of the sorted array.
+* Quadrant geometry is pure arithmetic on the code (no memory lookups) — this is what
+  makes the "virtual full quadtree" navigation of Sec. 4.2.2 accelerator friendly.
+
+Everything here is vectorized jnp; dtypes are int32 (codes for ``l_max <= 15`` fit).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "part1by1",
+    "compact1by1",
+    "encode_cells",
+    "decode_code",
+    "points_to_cells",
+    "morton_encode_points",
+    "block_box",
+    "point_to_block_dist2",
+]
+
+
+def part1by1(v: jnp.ndarray) -> jnp.ndarray:
+    """Insert a zero bit between each of the low 16 bits of ``v`` (int32)."""
+    v = v.astype(jnp.uint32)
+    v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & jnp.uint32(0x33333333)
+    v = (v | (v << 1)) & jnp.uint32(0x55555555)
+    return v
+
+
+def compact1by1(v: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`part1by1`: extract even-position bits."""
+    v = v.astype(jnp.uint32) & jnp.uint32(0x55555555)
+    v = (v | (v >> 1)) & jnp.uint32(0x33333333)
+    v = (v | (v >> 2)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v >> 4)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v >> 8)) & jnp.uint32(0x0000FFFF)
+    return v
+
+
+def encode_cells(cx: jnp.ndarray, cy: jnp.ndarray) -> jnp.ndarray:
+    """Morton-interleave integer cell coordinates -> int32 code."""
+    return (part1by1(cx) | (part1by1(cy) << 1)).astype(jnp.int32)
+
+
+def decode_code(z: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Morton code -> (cx, cy) integer cell coordinates (int32)."""
+    z = z.astype(jnp.uint32)
+    return compact1by1(z).astype(jnp.int32), compact1by1(z >> 1).astype(jnp.int32)
+
+
+def points_to_cells(
+    points: jnp.ndarray, origin: jnp.ndarray, side, level: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map (N, 2) points to integer cell coords of the 2^level x 2^level grid."""
+    n_cells = 1 << level
+    rel = (points - origin[None, :]) / side  # in [0, 1)
+    c = jnp.floor(rel * n_cells).astype(jnp.int32)
+    c = jnp.clip(c, 0, n_cells - 1)
+    return c[:, 0], c[:, 1]
+
+
+def morton_encode_points(
+    points: jnp.ndarray, origin: jnp.ndarray, side, level: int
+) -> jnp.ndarray:
+    """(N, 2) float points -> (N,) int32 Morton codes at ``level``."""
+    cx, cy = points_to_cells(points, origin, side, level)
+    return encode_cells(cx, cy)
+
+
+def block_box(code, a: jnp.ndarray, origin, side, l_max: int):
+    """Geometry of the aligned block ``[code, code + 4**a)`` of fine cells.
+
+    ``code`` is a fine (level ``l_max``) Morton code aligned to ``4**a``; the block is
+    the quadrant at level ``l_max - a``.  Returns (x0, y0, x1, y1) — pure arithmetic,
+    no memory lookups (the paper's "virtual full quadtree" property).
+    """
+    cellw = side / (1 << l_max)
+    cx, cy = decode_code(code)
+    # ``a`` may be a traced per-query array; 2**a fine cells per block side.
+    span = jnp.left_shift(jnp.asarray(1, jnp.int32), jnp.asarray(a, jnp.int32))
+    x0 = origin[0] + cx * cellw
+    y0 = origin[1] + cy * cellw
+    x1 = x0 + span * cellw
+    y1 = y0 + span * cellw
+    return x0, y0, x1, y1
+
+
+def point_to_block_dist2(px, py, code, a, origin, side, l_max: int):
+    """Squared min distance from point(s) to the aligned block ``[code, code+4**a)``.
+
+    Used for pruning (Sec. 4.2.2): a block whose min distance exceeds the current
+    k-th distance cannot contribute nearest neighbours.
+    """
+    x0, y0, x1, y1 = block_box(code, a, origin, side, l_max)
+    dx = jnp.maximum(jnp.maximum(x0 - px, px - x1), 0.0)
+    dy = jnp.maximum(jnp.maximum(y0 - py, py - y1), 0.0)
+    return dx * dx + dy * dy

@@ -1,0 +1,360 @@
+"""Iterative k-NN query computation (paper Sec. 4.2) — TPU/JAX adaptation.
+
+Paper recap: after indexing, every query is joined with its own quadtree leaf
+(first iteration); queries whose result list may still be improved by objects in
+other leaves remain *active* and advance along the Morton total order of leaves in
+two alternating directions (left/right), pruning every leaf/subtree whose box is
+farther than the query's current k-th distance, until no query is active.
+
+TPU adaptation (see DESIGN.md §3): the paper materializes per-cell thread-block
+tasks on the fly and sorts them by weight to balance GPU SMs.  Under XLA we run a
+**masked dense iteration**: all queries advance in lockstep inside one
+``lax.while_loop``; per iteration each query either
+  * SCANs one fixed-width window of ``W`` candidate objects from its current leaf
+    (gather -> masked distance tile -> top-k merge), or
+  * NAVigates the *virtual full quadtree* (arithmetic-only, paper Sec. 4.2.2):
+    up to ``max_nav`` aligned-block jumps that skip empty (count-pyramid) or
+    pruned (box farther than kth) regions in O(4^a)-sized strides.
+Queries are pre-sorted by Morton code, so active lanes stay spatially coherent —
+the same locality argument as the paper's SM-task packing, expressed as vector-lane
+coherence instead of warp coherence.
+
+Invariants that make block-skipping sound (proved in tests):
+  * cursors ``cl``/``cr`` always sit on leaf boundaries;
+  * an aligned block that starts (ends) on a leaf boundary is a union of whole
+    leaves, hence skippable as a unit;
+  * the k-th distance is non-increasing, so a once-far block stays prunable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import morton
+from .quadtree import QuadtreeIndex
+
+__all__ = ["knn_query_batch", "knn_query_batch_chunked", "KnnStats"]
+
+INF = jnp.inf
+
+
+class KnnStats(NamedTuple):
+    iterations: jnp.ndarray  # () i32 — outer while-loop trips
+    candidates: jnp.ndarray  # () i64-ish f32 — total candidate object slots scanned
+    leaves_visited: jnp.ndarray  # () i32 — scheduled leaf scans (incl. own leaf)
+
+
+class _State(NamedTuple):
+    best_d: jnp.ndarray  # (Q, k) ascending squared dists, inf-padded
+    best_i: jnp.ndarray  # (Q, k) object ids, -1 padded
+    scanning: jnp.ndarray  # (Q,) bool
+    s_cur: jnp.ndarray  # (Q,) i32 scan interval start (object array)
+    e_cur: jnp.ndarray  # (Q,) i32 scan interval end
+    off: jnp.ndarray  # (Q,) i32 window offset within interval
+    cl: jnp.ndarray  # (Q,) i32 left frontier (fine code, leaf boundary)
+    cr: jnp.ndarray  # (Q,) i32 right frontier
+    act_l: jnp.ndarray  # (Q,) bool
+    act_r: jnp.ndarray  # (Q,) bool
+    next_right: jnp.ndarray  # (Q,) bool — alternation bit (paper Sec. 4.2.2)
+    it: jnp.ndarray  # () i32
+    cand: jnp.ndarray  # () f32
+    leaves: jnp.ndarray  # () i32
+
+
+def _nav_step(index: QuadtreeIndex, qx, qy, kth2, cursor, run, dir_r):
+    """One navigation step; ``dir_r`` is a per-query bool (True = rightwards).
+
+    Returns (found, s, e, new_cursor, exhausted):
+      found     — a near, non-empty leaf was located (schedule its scan)
+      s, e      — object interval of that leaf
+      new_cursor— cursor after the step (past the found leaf, or past the skipped
+                  aligned block)
+      exhausted — cursor left the domain; direction goes inactive
+
+    All loops are rolled (lax.fori_loop) to keep the compiled program small; the
+    pyramid is indexed at a *dynamic* level via its flat layout.
+    """
+    l_max = index.l_max
+    n_fine = 4**l_max
+    one = jnp.int32(1)
+
+    exhausted = jnp.where(dir_r, cursor >= n_fine, cursor <= 0)
+    cprobe = jnp.clip(jnp.where(dir_r, cursor, cursor - 1), 0, n_fine - 1)
+
+    lvl = index.leaf_level[cprobe]
+    a0 = (l_max - lvl).astype(jnp.int32)
+    span0 = jnp.left_shift(one, 2 * a0)
+    # leaf start (right: == cursor; left: aligned block ending at cursor)
+    leaf_key = jnp.where(dir_r, cprobe, (cprobe >> (2 * a0)) << (2 * a0))
+    s = index.starts[jnp.clip(leaf_key, 0, n_fine - 1)]
+    e = index.starts[jnp.clip(leaf_key + span0, 0, n_fine)]
+    cnt = e - s
+    leaf_d2 = morton.point_to_block_dist2(
+        qx, qy, leaf_key, a0, index.origin, index.side, l_max
+    )
+    found = run & ~exhausted & (cnt > 0) & (leaf_d2 < kth2)
+
+    # --- far/empty aligned-block skip: pick the largest admissible jump.
+    pyr_n = index.pyramid.shape[0]
+
+    def try_level(a, best_a):
+        ai = jnp.int32(a)
+        blk = jnp.left_shift(one, 2 * ai)
+        code = jnp.where(dir_r, cursor, cursor - blk)
+        in_dom = jnp.where(dir_r, cursor + blk <= n_fine, cursor - blk >= 0)
+        pidx = jnp.where(dir_r, cursor >> (2 * ai), (cursor >> (2 * ai)) - 1)
+        lvl_off = (jnp.left_shift(one, 2 * (l_max - ai)) - 1) // 3
+        empty = index.pyramid[jnp.clip(lvl_off + pidx, 0, pyr_n - 1)] == 0
+        far = (
+            morton.point_to_block_dist2(
+                qx, qy, code, ai, index.origin, index.side, l_max
+            )
+            >= kth2
+        )
+        aligned = (cursor & (blk - 1)) == 0
+        ok = aligned & in_dom & (ai >= a0) & (empty | far)
+        return jnp.where(ok & (ai > best_a), ai, best_a)
+
+    best_a = jax.lax.fori_loop(1, l_max + 1, try_level, a0)
+    jump = jnp.left_shift(one, 2 * best_a)
+
+    step = jnp.where(found, span0, jump)
+    new_cursor = jnp.where(
+        run & ~exhausted, jnp.where(dir_r, cursor + step, cursor - step), cursor
+    )
+    return found, s, e, new_cursor, run & exhausted
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "window", "max_nav", "max_iters"),
+)
+def _knn_sorted(
+    index: QuadtreeIndex,
+    qpos: jnp.ndarray,
+    qid: jnp.ndarray,
+    k: int,
+    window: int,
+    max_nav: int,
+    max_iters: int,
+):
+    """k-NN for queries already sorted by Morton code."""
+    nq = qpos.shape[0]
+    n_obj = index.n_objects
+    n_fine = index.n_fine
+    l_max = index.l_max
+    qx, qy = qpos[:, 0], qpos[:, 1]
+
+    # --- first-iteration setup: query indexing (z_map lookup), own-leaf task.
+    fine = morton.morton_encode_points(qpos, index.origin, index.side, l_max)
+    lvl = index.leaf_level[fine]
+    shift = 2 * (l_max - lvl)
+    key = (fine >> shift) << shift
+    span = jnp.left_shift(jnp.int32(1), shift)
+    s0 = index.starts[key]
+    e0 = index.starts[jnp.clip(key + span, 0, n_fine)]
+
+    state = _State(
+        best_d=jnp.full((nq, k), INF, jnp.float32),
+        best_i=jnp.full((nq, k), -1, jnp.int32),
+        scanning=e0 > s0,
+        s_cur=s0,
+        e_cur=e0,
+        off=jnp.zeros((nq,), jnp.int32),
+        cl=key,
+        cr=key + span,
+        act_l=jnp.ones((nq,), bool),
+        act_r=jnp.ones((nq,), bool),
+        next_right=jnp.ones((nq,), bool),
+        it=jnp.int32(0),
+        cand=jnp.float32(0.0),
+        leaves=(e0 > s0).sum().astype(jnp.int32),
+    )
+
+    warange = jnp.arange(window, dtype=jnp.int32)
+
+    def live(st: _State):
+        return st.scanning | st.act_l | st.act_r
+
+    def cond(st: _State):
+        return jnp.any(live(st)) & (st.it < max_iters)
+
+    def body(st: _State) -> _State:
+        # ---------------- SCAN: one window of W candidates per scanning query.
+        idx = st.s_cur[:, None] + st.off[:, None] + warange[None, :]
+        valid = st.scanning[:, None] & (idx < st.e_cur[:, None])
+        idxc = jnp.clip(idx, 0, n_obj - 1)
+        # NOTE: a fused (x,y,id) packed gather was tried and REFUTED — two
+        # narrow gathers beat one wide one here (EXPERIMENTS.md §Perf, P4)
+        cpos = index.pos[idxc]  # (Q, W, 2)
+        cids = index.ids[idxc]
+        dx = cpos[:, :, 0] - qx[:, None]
+        dy = cpos[:, :, 1] - qy[:, None]
+        d2 = dx * dx + dy * dy
+        d2 = jnp.where(valid & (cids != qid[:, None]), d2, INF)
+        # top-k merge (result lists stay ascending; linear layout of Fig. 1)
+        all_d = jnp.concatenate([st.best_d, d2], axis=1)
+        all_i = jnp.concatenate([st.best_i, cids], axis=1)
+        neg, sel = jax.lax.top_k(-all_d, k)
+        best_d = -neg
+        best_i = jnp.take_along_axis(all_i, sel, axis=1)
+        kth2 = best_d[:, k - 1]
+
+        off2 = st.off + window
+        leaf_done = st.s_cur + off2 >= st.e_cur
+        scanning = st.scanning & ~leaf_done
+        off = jnp.where(st.scanning & ~leaf_done, off2, st.off)
+        cand = st.cand + valid.sum().astype(jnp.float32)
+
+        # ---------------- NAV: bounded frontier advance for idle active queries.
+        nav = ~scanning & (st.act_l | st.act_r)
+
+        def nav_body(_, nst):
+            cl, cr, act_l, act_r, next_right, s_cur, e_cur, found_any = nst
+            pending = nav & ~found_any & (act_l | act_r)
+            go_right = act_r & (next_right | ~act_l)
+            run = pending & (go_right | act_l)
+            cursor = jnp.where(go_right, cr, cl)
+            f, s_f, e_f, cur2, ex = _nav_step(
+                index, qx, qy, kth2, cursor, run, go_right
+            )
+            cr = jnp.where(run & go_right, cur2, cr)
+            cl = jnp.where(run & ~go_right, cur2, cl)
+            act_r = act_r & ~(ex & go_right)
+            act_l = act_l & ~(ex & ~go_right)
+            s_cur = jnp.where(f, s_f, s_cur)
+            e_cur = jnp.where(f, e_f, e_cur)
+            # alternate directions while both remain active (paper Sec. 4.2.2)
+            next_right = jnp.where(f, ~go_right, next_right)
+            found_any = found_any | f
+            return cl, cr, act_l, act_r, next_right, s_cur, e_cur, found_any
+
+        nst = (
+            st.cl,
+            st.cr,
+            st.act_l,
+            st.act_r,
+            st.next_right,
+            st.s_cur,
+            st.e_cur,
+            jnp.zeros((nq,), bool),
+        )
+        cl, cr, act_l, act_r, next_right, s_cur, e_cur, found_any = jax.lax.fori_loop(
+            0, max_nav, nav_body, nst
+        )
+
+        scanning = scanning | found_any
+        off = jnp.where(found_any, 0, off)
+        leaves = st.leaves + found_any.sum().astype(jnp.int32)
+
+        return _State(
+            best_d=best_d,
+            best_i=best_i,
+            scanning=scanning,
+            s_cur=s_cur,
+            e_cur=e_cur,
+            off=off,
+            cl=cl,
+            cr=cr,
+            act_l=act_l,
+            act_r=act_r,
+            next_right=next_right,
+            it=st.it + 1,
+            cand=cand,
+            leaves=leaves,
+        )
+
+    st = jax.lax.while_loop(cond, body, state)
+    stats = KnnStats(iterations=st.it, candidates=st.cand, leaves_visited=st.leaves)
+    return st.best_i, st.best_d, stats
+
+
+def knn_query_batch(
+    index: QuadtreeIndex,
+    qpos: jnp.ndarray,
+    qid: jnp.ndarray | None = None,
+    *,
+    k: int = 32,
+    window: int = 128,
+    max_nav: int | None = None,
+    max_iters: int = 100_000,
+):
+    """Compute a batch of k-NN queries against the index (one tick's ``Q``).
+
+    Parameters
+    ----------
+    index: built/refreshed :class:`QuadtreeIndex` over the tick's positions ``P``.
+    qpos: (Q, 2) query centers.
+    qid:  (Q,) issuing-object id, excluded from its own result (Def. 1's ``i != j``);
+          pass None for external (non-object) queries.
+    k: result-list size.
+    window: candidate window width W (the per-iteration tile).
+    max_nav: navigation steps bundled per iteration (default ``2*l_max + 4``,
+        enough to cross the whole domain by aligned jumps).
+
+    Returns
+    -------
+    (nn_idx (Q, k) i32, nn_dist (Q, k) f32 *euclidean*, stats) — rows ascending by
+    distance, padded with (-1, inf) when fewer than k objects exist.  Ties at the
+    k-th distance are resolved arbitrarily (paper Sec. 2.1).
+    """
+    qpos = jnp.asarray(qpos, jnp.float32)
+    nq = qpos.shape[0]
+    if qid is None:
+        qid = jnp.full((nq,), -2, jnp.int32)  # never matches a real id
+    else:
+        qid = jnp.asarray(qid, jnp.int32)
+    if max_nav is None:
+        max_nav = 2 * index.l_max + 4
+    # spatial sort of queries (locality for z_map lookups & frontier coherence)
+    qcodes = morton.morton_encode_points(qpos, index.origin, index.side, index.l_max)
+    order = jnp.argsort(qcodes)
+    inv = jnp.argsort(order)
+    idx_s, d2_s, stats = _knn_sorted(
+        index, qpos[order], qid[order], k, window, max_nav, max_iters
+    )
+    return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+
+def knn_query_batch_chunked(
+    index: QuadtreeIndex,
+    qpos,
+    qid=None,
+    *,
+    k: int = 32,
+    window: int = 128,
+    chunk: int = 8192,
+    **kw,
+):
+    """Memory-bounded driver: process queries in fixed-size chunks (one jit cache)."""
+    import numpy as np
+
+    nq = qpos.shape[0]
+    if qid is None:
+        qid = np.full((nq,), -2, np.int32)
+    out_i, out_d = [], []
+    iters = 0
+    cand = 0.0
+    leaves = 0
+    for lo in range(0, nq, chunk):
+        hi = min(lo + chunk, nq)
+        qp = jnp.asarray(qpos[lo:hi])
+        qi = jnp.asarray(qid[lo:hi])
+        if hi - lo < chunk:  # pad to keep a single compiled shape
+            pad = chunk - (hi - lo)
+            qp = jnp.concatenate([qp, jnp.tile(qp[-1:], (pad, 1))])
+            qi = jnp.concatenate([qi, jnp.full((pad,), -2, jnp.int32)])
+        ii, dd, stats = knn_query_batch(index, qp, qi, k=k, window=window, **kw)
+        out_i.append(np.asarray(ii[: hi - lo]))
+        out_d.append(np.asarray(dd[: hi - lo]))
+        iters += int(stats.iterations)
+        cand += float(stats.candidates)
+        leaves += int(stats.leaves_visited)
+    return (
+        np.concatenate(out_i),
+        np.concatenate(out_d),
+        KnnStats(iterations=iters, candidates=cand, leaves_visited=leaves),
+    )

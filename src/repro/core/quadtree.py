@@ -1,0 +1,218 @@
+"""PR-quadtree spatial index (paper Sec. 4.1), built as a single device program.
+
+The paper builds the tree level-by-level with a GPU/CPU ping-pong (Morton codes +
+radix sort on GPU, split decisions on CPU).  On TPU/XLA we improve on this with a
+**count pyramid**: one ``bincount`` at the finest level ``l_max`` plus ``l_max``
+reshape-sums give the population of *every* quadrant at *every* level in O(|P|).
+The PR-quadtree leaf predicate — "deepest ancestor chain whose counts exceed
+``th_quad``" — is then evaluated vectorized for all ``4**l_max`` fine cells at once,
+which directly materializes the paper's ``z_map`` lookup table (fine cell -> leaf).
+
+Leaf identity convention (matches the paper's total order, Fig. 2): a leaf at level
+``l`` is identified by its *first fine cell code* ``key = z << 2*(l_max - l)``; leaves
+are totally ordered by ``key`` and tile ``[0, 4**l_max)`` into consecutive intervals.
+Because of the Morton sort invariance, the objects of a leaf occupy the contiguous
+slice ``[starts[key], starts[key + 4**(l_max-l)])`` of the sorted object array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import morton
+
+__all__ = ["QuadtreeIndex", "build_index", "reindex_objects", "leaf_of_points"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "origin",
+        "side",
+        "pos",
+        "ids",
+        "codes",
+        "starts",
+        "leaf_level",
+        "pyramid",
+    ],
+    meta_fields=["l_max", "th_quad"],
+)
+@dataclasses.dataclass(frozen=True)
+class QuadtreeIndex:
+    """The spatial index + Morton-sorted object store (a pytree).
+
+    Attributes
+    ----------
+    origin: (2,) f32 — lower-left corner of the MBR ``G``.
+    side:   ()  f32 — side length of ``G`` (squared region, as in the paper).
+    pos:    (N, 2) f32 — object positions, sorted by fine Morton code (SoV layout).
+    ids:    (N,) i32 — original object ids, same order.
+    codes:  (N,) i32 — fine Morton codes, sorted.
+    starts: (4**l_max + 1,) i32 — prefix offsets: fine cell c holds objects
+            ``pos[starts[c]:starts[c+1]]``.
+    leaf_level: (4**l_max,) i32 — level of the quadtree leaf covering each fine cell
+            (this *is* the paper's z_map: leaf key = (c >> 2d) << 2d,
+            d = l_max - leaf_level[c]).
+    pyramid: flattened i32 array of quadrant populations at every level
+            (``pyr[pyramid_offset(l) + z]``); used for empty-block skipping during
+            navigation.
+    l_max:   static int — maximum quadtree depth.
+    th_quad: static int — max objects per leaf (split threshold).
+    """
+
+    origin: jnp.ndarray
+    side: jnp.ndarray
+    pos: jnp.ndarray
+    ids: jnp.ndarray
+    codes: jnp.ndarray
+    starts: jnp.ndarray
+    leaf_level: jnp.ndarray
+    pyramid: jnp.ndarray
+    l_max: int
+    th_quad: int
+
+    def level_counts(self, level: int) -> jnp.ndarray:
+        """Populations of the 4**level quadrants at ``level`` (view of pyramid)."""
+        off = pyramid_offset(level)
+        return self.pyramid[off : off + 4**level]
+
+    @property
+    def n_objects(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def n_fine(self) -> int:
+        return 4**self.l_max
+
+
+def pyramid_offset(level):
+    """Start of level ``level`` inside the flattened pyramid: (4**l - 1) / 3.
+
+    Works for both static ints and traced int arrays — this is what lets the
+    navigation loop index the pyramid at a *dynamic* level (rolled loops keep the
+    compiled program small).
+    """
+    return ((1 << (2 * level)) - 1) // 3 if isinstance(level, int) else (
+        (jnp.left_shift(jnp.int32(1), 2 * level) - 1) // 3
+    )
+
+
+def _count_pyramid(codes: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Quadrant populations at every level, flattened level-major.
+
+    ``pyr[pyramid_offset(l) + z]`` = population of quadrant ``(l, z)``.
+    Total size (4**(l_max+1) - 1) / 3.
+    """
+    counts = jnp.bincount(codes, length=4**l_max).astype(jnp.int32)
+    levels = [counts]
+    cur = counts
+    for _ in range(l_max):
+        cur = cur.reshape(-1, 4).sum(axis=1)
+        levels.append(cur)
+    return jnp.concatenate(list(reversed(levels)))
+
+
+def _leaf_levels(pyramid: jnp.ndarray, l_max: int, th_quad: int) -> jnp.ndarray:
+    """Leaf level per fine cell = number of split ancestors along its path.
+
+    A node splits iff its population exceeds ``th_quad`` (and l < l_max).  Path
+    populations are non-increasing with depth, so the split predicate holds on a
+    prefix of levels and the *count of splitting ancestors* equals the leaf level.
+    """
+    fine = jnp.arange(4**l_max, dtype=jnp.int32)
+    ll = jnp.zeros(4**l_max, dtype=jnp.int32)
+    for l in range(l_max):  # levels 0 .. l_max-1 may split
+        anc = fine >> jnp.int32(2 * (l_max - l))
+        lvl_counts = pyramid[pyramid_offset(l) : pyramid_offset(l) + 4**l]
+        ll = ll + (lvl_counts[anc] > th_quad).astype(jnp.int32)
+    return ll
+
+
+@partial(jax.jit, static_argnames=("l_max", "th_quad"))
+def build_index(
+    points: jnp.ndarray,
+    origin: jnp.ndarray,
+    side,
+    *,
+    l_max: int = 8,
+    th_quad: int = 192,
+) -> QuadtreeIndex:
+    """Stage (i) + (ii) of the pipeline: build the PR-quadtree and index objects.
+
+    Equivalent to the paper's *index creation* (Sec. 4.1.1) + *moving objects
+    indexing* (Sec. 4.1.2), fused into one device program:
+      1. fine Morton codes for all points                      (paper: GPU)
+      2. sort by code (XLA sort ~ radix sort role)             (paper: GPU radix)
+      3. count pyramid + leaf levels -> z_map                  (paper: GPU+CPU loop)
+      4. prefix offsets -> per-cell object intervals           (paper: GPU)
+    """
+    points = points.astype(jnp.float32)
+    origin = jnp.asarray(origin, jnp.float32)
+    side = jnp.asarray(side, jnp.float32)
+    codes = morton.morton_encode_points(points, origin, side, l_max)
+    order = jnp.argsort(codes)
+    codes_s = codes[order]
+    pos_s = points[order]
+    ids_s = order.astype(jnp.int32)
+    pyramid = _count_pyramid(codes, l_max)
+    leaf_level = _leaf_levels(pyramid, l_max, th_quad)
+    fine_counts = pyramid[pyramid_offset(l_max) :]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
+    )
+    return QuadtreeIndex(
+        origin=origin,
+        side=side,
+        pos=pos_s,
+        ids=ids_s,
+        codes=codes_s,
+        starts=starts,
+        leaf_level=leaf_level,
+        pyramid=pyramid,
+        l_max=l_max,
+        th_quad=th_quad,
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def reindex_objects(index: QuadtreeIndex, points: jnp.ndarray) -> QuadtreeIndex:
+    """Stage (ii) only: re-sort fresh object positions into the *existing* partition.
+
+    Per the paper, stage (i) (the space partition / z_map) is reused across ticks
+    while the distribution is stable; every tick only re-sorts the new positions and
+    recomputes the per-cell intervals (+ the pyramid, which is O(|C|) and needed for
+    empty-block pruning).
+    """
+    l_max = index.l_max
+    points = points.astype(jnp.float32)
+    codes = morton.morton_encode_points(points, index.origin, index.side, l_max)
+    order = jnp.argsort(codes)
+    pyramid = _count_pyramid(codes, l_max)
+    fine_counts = pyramid[pyramid_offset(l_max) :]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
+    )
+    return dataclasses.replace(
+        index,
+        pos=points[order],
+        ids=order.astype(jnp.int32),
+        codes=codes[order],
+        starts=starts,
+        pyramid=pyramid,
+    )
+
+
+def leaf_of_points(index: QuadtreeIndex, points: jnp.ndarray):
+    """z_map lookup (paper Sec. 4.1.1): points -> (leaf_key, leaf_level).
+
+    Constant-time arithmetic + one table read per point; no tree descent.
+    """
+    fine = morton.morton_encode_points(points, index.origin, index.side, index.l_max)
+    lvl = index.leaf_level[fine]
+    shift = 2 * (index.l_max - lvl)
+    key = (fine >> shift) << shift
+    return key, lvl

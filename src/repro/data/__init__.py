@@ -1,0 +1,3 @@
+from .generators import MovingObjectWorkload, WorkloadConfig, make_workload
+
+__all__ = ["MovingObjectWorkload", "WorkloadConfig", "make_workload"]

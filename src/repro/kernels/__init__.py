@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
+
+Layout per the repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec kernel, ``ops.py`` the jit'd wrappers, ``ref.py`` the pure-jnp
+oracles used by the allclose sweeps in tests/.
+"""
+from .ops import bucket_kselect_op, pairwise_dist_op, topk_select_op
+from .ref import bucket_kselect_ref, pairwise_dist_ref, topk_select_ref
+
+__all__ = [
+    "bucket_kselect_op",
+    "pairwise_dist_op",
+    "topk_select_op",
+    "bucket_kselect_ref",
+    "pairwise_dist_ref",
+    "topk_select_ref",
+]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused distance + bucket k-selection (paper Sec. 4.2.1).
+
+The paper's second pillar is the bucket k-selection of Alabi et al.: find a
+radius enclosing the k nearest candidates by iterative histogram refinement,
+*without* sorting and without materializing distances.  The GPU version runs one
+query per thread with a private refinement loop; the TPU version processes a
+Q_TILE of queries per grid step with the whole candidate window resident in
+VMEM: distances are (re)computed on the VPU, the per-query histogram is built by
+bin-broadcast compares, and the refinement loop is a ``lax.fori_loop`` — the
+distance matrix never touches HBM (the fusion is the win; see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_kselect", "Q_TILE"]
+
+Q_TILE = 8
+
+
+def _make_kernel(k: int, num_bins: int, iters: int, c: int):
+    def kernel(qx_ref, qy_ref, px_ref, py_ref, valid_ref, out_ref):
+        qx = qx_ref[:]
+        qy = qy_ref[:]
+        px = px_ref[:]
+        py = py_ref[:]
+        valid = valid_ref[:]
+        dx = qx[:, None] - px[None, :]
+        dy = qy[:, None] - py[None, :]
+        d2 = dx * dx + dy * dy
+        big = jnp.asarray(jnp.inf, d2.dtype)
+        d2 = jnp.where(valid[None, :], d2, big)
+        n_valid = valid.astype(jnp.int32).sum()
+
+        lo = jnp.min(d2, axis=1)
+        hi0 = jnp.max(jnp.where(valid[None, :], d2, -big), axis=1)
+        hi = jnp.maximum(hi0, lo) * (1 + 1e-6) + 1e-30
+        kth = jnp.full((Q_TILE,), k, jnp.int32)
+        bins = jnp.arange(num_bins, dtype=jnp.int32)
+
+        def body(_, state):
+            lo, hi, kth = state
+            width = jnp.maximum((hi - lo) / num_bins, 1e-30)
+            b = jnp.clip(
+                jnp.floor((d2 - lo[:, None]) / width[:, None]), 0, num_bins - 1
+            ).astype(jnp.int32)
+            in_range = (d2 >= lo[:, None]) & (d2 < hi[:, None])
+            # (Q, C, NB) bin-broadcast compare -> per-query histogram
+            onehot = (b[:, :, None] == bins[None, None, :]) & in_range[:, :, None]
+            hist = onehot.astype(jnp.int32).sum(axis=1)
+            cum = jnp.cumsum(hist, axis=1)
+            sel = jnp.argmax(cum >= kth[:, None], axis=1)
+            below = jnp.where(
+                sel > 0,
+                jnp.take_along_axis(cum, jnp.maximum(sel - 1, 0)[:, None], 1)[:, 0],
+                0,
+            )
+            new_lo = lo + sel.astype(lo.dtype) * width
+            new_hi = new_lo + width
+            return new_lo, new_hi, kth - below
+
+        lo, hi, kth = jax.lax.fori_loop(0, iters, body, (lo, hi, kth))
+        out_ref[:] = jnp.where(n_valid < k, big, hi).astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_bins", "iters", "interpret")
+)
+def bucket_kselect(
+    qx,
+    qy,
+    px,
+    py,
+    valid,
+    *,
+    k: int,
+    num_bins: int = 32,
+    iters: int = 4,
+    interpret: bool = True,
+):
+    """(Q,) queries x (C,) shared candidate window -> (Q,) k-selection radius.
+
+    Guarantee: ``count(valid & d2 < r) >= min(k, n_valid)`` per query, with the
+    excess bounded by one bucket width after ``iters`` refinements; rows with
+    fewer than k valid candidates return +inf.
+    """
+    q, c = qx.shape[0], px.shape[0]
+    assert q % Q_TILE == 0, q
+    grid = (q // Q_TILE,)
+    return pl.pallas_call(
+        _make_kernel(k, num_bins, iters, c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(qx, qy, px, py, valid)

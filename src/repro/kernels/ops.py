@@ -1,0 +1,90 @@
+"""Jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+On this CPU container kernels run in ``interpret=True`` mode (the kernel body is
+executed on CPU for correctness); on TPU the same calls compile to Mosaic.  Set
+``REPRO_PALLAS_INTERPRET=0`` to request compiled mode.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bucket_kselect as _bk
+from . import pairwise_dist as _pd
+from . import topk_select as _tk
+
+__all__ = ["pairwise_dist_op", "bucket_kselect_op", "topk_select_op", "INTERPRET"]
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or (
+    jax.default_backend() != "tpu"
+)
+
+
+def _pad_to(x, n, fill):
+    if x.shape[0] == n:
+        return x
+    pad = n - x.shape[0]
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+def pairwise_dist_op(qpos, ppos, valid=None, *, interpret: bool | None = None):
+    """(Q,2) x (C,2) [+ (C,) mask] -> (Q, C) masked squared distances."""
+    interpret = INTERPRET if interpret is None else interpret
+    q, c = qpos.shape[0], ppos.shape[0]
+    qp = int(np.ceil(q / _pd.Q_TILE)) * _pd.Q_TILE
+    cp = int(np.ceil(c / _pd.C_TILE)) * _pd.C_TILE
+    if valid is None:
+        valid = jnp.ones((c,), bool)
+    qx = _pad_to(qpos[:, 0].astype(jnp.float32), qp, 0)
+    qy = _pad_to(qpos[:, 1].astype(jnp.float32), qp, 0)
+    px = _pad_to(ppos[:, 0].astype(jnp.float32), cp, 0)
+    py = _pad_to(ppos[:, 1].astype(jnp.float32), cp, 0)
+    v = _pad_to(valid, cp, False)
+    out = _pd.pairwise_dist(qx, qy, px, py, v, interpret=interpret)
+    return out[:q, :c]
+
+
+def bucket_kselect_op(
+    qpos,
+    ppos,
+    valid=None,
+    *,
+    k: int,
+    num_bins: int = 32,
+    iters: int = 4,
+    interpret: bool | None = None,
+):
+    """(Q,2) queries x (C,2) shared candidates -> (Q,) k-selection radius."""
+    interpret = INTERPRET if interpret is None else interpret
+    q, c = qpos.shape[0], ppos.shape[0]
+    qp = int(np.ceil(q / _bk.Q_TILE)) * _bk.Q_TILE
+    if valid is None:
+        valid = jnp.ones((c,), bool)
+    qx = _pad_to(qpos[:, 0].astype(jnp.float32), qp, 0)
+    qy = _pad_to(qpos[:, 1].astype(jnp.float32), qp, 0)
+    out = _bk.bucket_kselect(
+        qx,
+        qy,
+        ppos[:, 0].astype(jnp.float32),
+        ppos[:, 1].astype(jnp.float32),
+        valid,
+        k=k,
+        num_bins=num_bins,
+        iters=iters,
+        interpret=interpret,
+    )
+    return out[:q]
+
+
+def topk_select_op(d2, ids, *, k: int, interpret: bool | None = None):
+    """(Q, C) distances + ids -> ((Q, k), (Q, k)) ascending top-k smallest."""
+    interpret = INTERPRET if interpret is None else interpret
+    q = d2.shape[0]
+    qp = int(np.ceil(q / _tk.Q_TILE)) * _tk.Q_TILE
+    d2p = _pad_to(d2.astype(jnp.float32), qp, jnp.inf)
+    idsp = _pad_to(ids.astype(jnp.int32), qp, -1)
+    out_d, out_i = _tk.topk_select(d2p, idsp, k=k, interpret=interpret)
+    return out_d[:q], out_i[:q]

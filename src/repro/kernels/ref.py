@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each ``*_ref`` function has exactly the same signature/semantics as the jit'd
+wrapper in :mod:`repro.kernels.ops`; kernel tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pairwise_dist_ref", "bucket_kselect_ref", "topk_select_ref"]
+
+
+def pairwise_dist_ref(qx, qy, px, py, valid):
+    """Masked squared L2 distances: (Q,),(Q,),(C,),(C,),(C,) -> (Q, C).
+
+    Invalid candidates map to +inf (paper Alg. 1 distance scans; SoV layout).
+    """
+    dx = qx[:, None] - px[None, :]
+    dy = qy[:, None] - py[None, :]
+    d2 = dx * dx + dy * dy
+    return jnp.where(valid[None, :], d2, jnp.inf)
+
+
+def bucket_kselect_ref(qx, qy, px, py, valid, *, k: int, num_bins: int, iters: int):
+    """Fused distance + bucket k-selection radius (paper's findKDist pillar).
+
+    Returns (Q,) radius r with count(valid & d2 < r) >= min(k, n_valid); rows
+    with fewer than k valid candidates return +inf (paper Sec. 4.2.1).
+    """
+    d2 = pairwise_dist_ref(qx, qy, px, py, valid)
+    n_valid = valid.sum()
+    big = jnp.asarray(jnp.inf, d2.dtype)
+    lo = jnp.min(d2, axis=1)
+    hi0 = jnp.max(jnp.where(jnp.isinf(d2), -big, d2), axis=1)
+    hi = jnp.maximum(hi0, lo) * (1 + 1e-6) + 1e-30
+    kth = jnp.full((d2.shape[0],), k, jnp.int32)
+    for _ in range(iters):
+        width = jnp.maximum((hi - lo) / num_bins, 1e-30)
+        b = jnp.clip(
+            jnp.floor((d2 - lo[:, None]) / width[:, None]), 0, num_bins - 1
+        ).astype(jnp.int32)
+        in_range = (d2 >= lo[:, None]) & (d2 < hi[:, None])
+        hist = jnp.sum(
+            (b[:, :, None] == jnp.arange(num_bins)[None, None, :]) & in_range[:, :, None],
+            axis=1,
+        ).astype(jnp.int32)
+        cum = jnp.cumsum(hist, axis=1)
+        sel = (cum >= kth[:, None]).argmax(axis=1)
+        below = jnp.where(
+            sel > 0,
+            jnp.take_along_axis(cum, jnp.maximum(sel - 1, 0)[:, None], 1)[:, 0],
+            0,
+        )
+        lo = lo + sel * width
+        hi = lo + width
+        kth = kth - below
+    return jnp.where(n_valid < k, big, hi)
+
+
+def topk_select_ref(d2, ids, *, k: int):
+    """Per-row k smallest: (Q, C) dists + (Q, C) ids -> ((Q, k) d2, (Q, k) ids).
+
+    Ascending; +inf / -1 padded.  This is the result-list materialization of the
+    paper (Fig. 1 linear layout) and doubles as MoE top-k routing (on -logits).
+    """
+    import jax
+
+    neg, sel = jax.lax.top_k(-d2, k)
+    out_d = -neg
+    out_i = jnp.take_along_axis(ids, sel, axis=1)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    return out_d, out_i

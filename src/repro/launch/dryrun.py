@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell we
+``jit(step).lower(*abstract_avals).compile()`` against the production mesh
+(16x16 single-pod / 2x16x16 multi-pod of host placeholder devices), then record
+``memory_analysis()`` (fits-per-device evidence), ``cost_analysis()`` (FLOPs /
+bytes for §Roofline) and the collective schedule parsed from the compiled HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results/dryrun.jsonl
+  ... --override kv_seq=model --override seq=model     # hillclimb experiments
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist import use_rules
+from repro.launch.hlo_stats import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_decode_state,
+    abstract_train_state,
+    input_specs,
+    shard_struct,
+)
+from repro.models import decode_step, forward
+from repro.train import OptConfig, make_train_step
+
+# long_500k requires sub-quadratic attention; pure full-attention archs skip it
+# (DESIGN.md §5).  SWA / SSM / hybrid run it.
+LONG_OK = {"h2o_danube_3_4b", "zamba2_7b", "rwkv6_3b"}
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCell) -> str | None:
+    if shape.name == "long_500k" and cfg.arch_id not in LONG_OK:
+        return "long_500k skipped: pure full (quadratic) attention arch"
+    return None
+
+
+def default_overrides(cfg: ModelConfig, shape: ShapeCell, model_axis: int = 16) -> dict:
+    """Arch-adaptive logical bindings.
+
+    When the head count does not divide the model axis (granite 24H, deepseek/
+    yi 56H), attention scores cannot shard on heads — fall back to sequence
+    parallelism (q-sequence -> 'model') for full-sequence kinds so the (S x S)
+    score tile shards instead of replicating.
+    """
+    ov = {}
+    if (
+        shape.kind != "decode"
+        and cfg.family != "ssm"
+        and cfg.n_heads % model_axis != 0
+    ):
+        # heads can't shard -> shard the q-sequence inside attention instead
+        # (scores tile shards on q rows) and the residual stream alongside
+        ov["seq"] = "model"
+        ov["act_seq"] = "model"
+    if shape.kind != "decode" and cfg.sp_residual:
+        # Megatron-SP: residual seq-sharded; blocks gather once at entry and
+        # reduce-scatter at exit (act_seq stays unsharded -> heads/ff TP inside)
+        ov["seq"] = "model"
+    if shape.kind == "decode":
+        # weights-stationary decode: per-token activations are tiny — replicate
+        # them instead of re-gathering FSDP-sharded weights every token
+        # (EXPERIMENTS.md §Perf, iteration Q1); caches stay on 'cache_batch'
+        ov["batch"] = None
+    return ov
+
+
+def depth_units(cfg: ModelConfig):
+    """(layers-per-unit, n_units) for linear cost extrapolation over depth.
+
+    XLA's cost analysis counts a while-loop body ONCE, so costs inside the
+    layer scan are underreported by the trip count.  We compile the cell at
+    1-unit and 2-unit depth and extrapolate linearly — exact for anything that
+    is per-layer (block compute, in-scan collectives, optimizer update on
+    stacked params) or depth-independent (embedding, loss, grad all-reduce of
+    non-stacked params).
+    """
+    if cfg.family == "hybrid":
+        u = cfg.shared_attn_every + 1
+        return u, cfg.n_layers / u
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every, cfg.n_layers / cfg.cross_attn_every
+    if cfg.family == "encdec":
+        return 1, cfg.n_enc_layers  # one unit = 1 enc + 1 dec layer
+    return 1, cfg.n_layers
+
+
+def with_depth(cfg: ModelConfig, units: int) -> ModelConfig:
+    """Reduced-depth config with UNROLLED layer scans (exact cost counting)."""
+    import dataclasses
+
+    u, _ = depth_units(cfg)
+    if cfg.family == "encdec":
+        return dataclasses.replace(
+            cfg, n_enc_layers=units, n_dec_layers=units, n_layers=2 * units,
+            scan_unroll=True,
+        )
+    return dataclasses.replace(cfg, n_layers=u * units, scan_unroll=True)
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeCell, accum: int):
+    if shape.kind == "train":
+        params, opt = abstract_train_state(cfg)
+        batch = input_specs(cfg, shape)
+        step = make_train_step(cfg, OptConfig(), accum=accum)
+        return jax.jit(step).lower(params, opt, batch)
+    if shape.kind == "prefill":
+        params, _ = abstract_train_state(cfg)
+        batch = input_specs(cfg, shape)
+        fn = lambda p, b: forward(p, cfg, b, logits_last_only=True)[0]
+        return jax.jit(fn).lower(params, batch)
+    params, _ = abstract_train_state(cfg)
+    state = abstract_decode_state(cfg, shape)
+    tok = input_specs(cfg, shape)["tokens"]
+    pos = shard_struct((), jnp.int32, ())
+    fn = lambda p, st, t, q: decode_step(p, cfg, st, t, q)[0:2]
+    return jax.jit(fn).lower(params, state, tok, pos)
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll["total_bytes"]),
+        "collectives": coll,
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    overrides: dict | None = None,
+    accum: int = 1,
+) -> dict:
+    cfg = get_config(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "overrides": overrides or {},
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+
+    merged = default_overrides(cfg, shape)
+    merged.update(overrides or {})
+    overrides = merged
+    rec["overrides"] = overrides
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    with use_rules(mesh, overrides):
+        # --- full-depth compile: proves lowering + sharding + memory
+        t0 = time.time()
+        lowered = _lower_cell(cfg, shape, accum)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        # --- depth-1/2 compiles: scan-trip-count-exact cost extrapolation
+        u, n_units = depth_units(cfg)
+        c1 = _cost_of(_lower_cell(with_depth(cfg, 1), shape, accum).compile())
+        c2 = _cost_of(_lower_cell(with_depth(cfg, 2), shape, accum).compile())
+
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        if rec["memory"]:
+            total = (
+                rec["memory"].get("argument_size_in_bytes", 0)
+                + rec["memory"].get("temp_size_in_bytes", 0)
+            )
+            rec["memory"]["bytes_per_device"] = total
+    except Exception as e:  # pragma: no cover - backend specific
+        rec["memory"] = {"error": str(e)}
+
+    def extrap(key):
+        return c1[key] + (n_units - 1.0) * (c2[key] - c1[key])
+
+    flops = extrap("flops")
+    bytes_accessed = extrap("bytes_accessed")
+    coll_bytes = extrap("collective_bytes")
+    rec["cost"] = {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": coll_bytes,
+        "raw_full_depth": _cost_of(compiled),
+        "depth1": {k: c1[k] for k in ("flops", "bytes_accessed", "collective_bytes")},
+        "depth2": {k: c2[k] for k in ("flops", "bytes_accessed", "collective_bytes")},
+        "n_units": n_units,
+    }
+    rec["collectives"] = c2["collectives"]  # schedule shape (kinds/counts) at 2 units
+
+    # MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (D = tokens this step)
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = (6 if shape.kind == "train" else 2) * n_active * tokens
+    rec["model_flops"] = float(mf)
+    rec["n_params"] = cfg.n_params()
+    rec["n_active_params"] = n_active
+    rec["roofline"] = roofline_terms(
+        flops, bytes_accessed, coll_bytes, n_chips, model_flops=mf
+    )
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument(
+        "--override",
+        action="append",
+        default=[],
+        help="logical=mesh_axis rebinding, e.g. --override kv_seq=model",
+    )
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = None if v in ("", "none", "None") else (
+            tuple(v.split("+")) if "+" in v else v
+        )
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    ok = True
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(
+                    arch, shape, multi_pod=mp, overrides=overrides or None,
+                    accum=args.accum,
+                )
+            except Exception as e:
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:],
+                }
+                ok = False
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(
+                    f"# {arch} {shape} {rec['mesh']}: compute={r['compute_s']:.4f}s "
+                    f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.4f}s "
+                    f"dominant={r['dominant']} useful={r.get('useful_flops_ratio', 0):.3f} "
+                    f"(compile {rec['compile_s']}s)",
+                    file=sys.stderr,
+                    flush=True,
+                )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis`` gives HLO FLOPs + bytes accessed; collective bytes are NOT in
+cost_analysis, so we parse the post-partitioning HLO text and sum the *result*
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` forms counted once, ``-done`` skipped).
+Result-shape bytes are the per-device traffic approximation used consistently
+across all cells (methodology note in EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (values given by the assignment).
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_stats", "roofline_terms", "HW"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 / chip
+    "hbm_bw": 819e9,  # B/s / chip
+    "ici_bw": 50e9,  # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# e.g.:  %ag = bf16[2,128]{1,0} all-gather(...)   or  (f32[4], f32[4]) all-to-all(
+_OP_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes + counts per collective kind over an HLO module text."""
+    bytes_by_kind: dict[str, int] = {}
+    count_by_kind: dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        b = _shape_bytes(shapes)
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "count_by_kind": count_by_kind,
+        "total_bytes": sum(bytes_by_kind.values()),
+        "total_count": sum(count_by_kind.values()),
+    }
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    n_chips: int,
+    *,
+    model_flops: float | None = None,
+) -> dict:
+    """The three roofline terms, in seconds (per assignment formulae).
+
+    flops / bytes_accessed are whole-program HLO numbers (cost_analysis of the
+    per-device module already reports per-device work under SPMD —
+    collective_bytes likewise comes from the per-device module).
+    """
+    compute_s = flops / HW["peak_flops"]
+    memory_s = bytes_accessed / HW["hbm_bw"]
+    collective_s = collective_bytes / HW["ici_bw"]
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "n_chips": n_chips,
+    }
+    dom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["dominant"] = (
+        "compute"
+        if dom == compute_s
+        else ("memory" if dom == memory_s else "collective")
+    )
+    terms["bound_s"] = dom
+    if model_flops is not None:
+        terms["model_flops"] = model_flops
+        terms["useful_flops_ratio"] = model_flops / max(flops * n_chips, 1.0)
+    return terms

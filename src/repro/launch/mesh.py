@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16 and multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS *before* any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Tiny mesh over however many (possibly fake) local devices exist — tests."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,145 @@
+"""Abstract input/param/state specs for the dry-run (no allocation, ever).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable) for every model input of the given (arch x shape) cell;
+``abstract_train_state`` / ``abstract_decode_state`` build the matching param /
+optimizer / cache avals via ``jax.eval_shape``.  All carry NamedShardings built
+from the active logical rules, so ``jit(...).lower(*avals)`` fully determines
+the SPMD partitioning without materializing a single array.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist import logical_to_spec
+from repro.dist.sharding import current_rules
+from repro.models import init_decode_state, init_params, param_logical
+from repro.train.optimizer import init_opt
+
+__all__ = [
+    "input_specs",
+    "abstract_params",
+    "abstract_train_state",
+    "abstract_decode_state",
+    "shard_struct",
+]
+
+
+def _named(spec: P):
+    lr = current_rules()
+    assert lr is not None, "input_specs must run inside dist.use_rules(mesh)"
+    return NamedSharding(lr.mesh, spec)
+
+
+def shard_struct(shape, dtype, logical_axes):
+    spec = logical_to_spec(logical_axes, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_named(spec))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """Model inputs for one cell.  train/prefill: full sequences; decode: one
+    new token (the KV cache / recurrent state lives in the decode state)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        out = {"tokens": shard_struct((b, 1), jnp.int32, ("batch", None))}
+        return out
+    out = {"tokens": shard_struct((b, s), jnp.int32, ("batch", "seq"))}
+    if cfg.family == "encdec":
+        # stub frontend: precomputed speech-frame embeddings
+        out["frames"] = shard_struct(
+            (b, s, cfg.d_model), jnp.bfloat16, ("batch", "kv_seq", None)
+        )
+    if cfg.family == "vlm":
+        # stub frontend: precomputed patch embeddings
+        out["img"] = shard_struct(
+            (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16, ("batch", "img", None)
+        )
+    return out
+
+
+def _with_sharding(avals, logical_tree):
+    def leaf(a, ax):
+        spec = logical_to_spec(ax, a.shape)
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_named(spec))
+
+    return jax.tree.map(
+        leaf,
+        avals,
+        logical_tree,
+        is_leaf=lambda t: isinstance(t, tuple)
+        and all(isinstance(e, (str, type(None))) for e in t),
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    avals = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return _with_sharding(avals, param_logical(cfg))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    opt_avals = jax.eval_shape(init_opt, params)
+
+    def opt_leaf(a):
+        # moments inherit the param sharding (same shapes); step is replicated
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_named(P()))
+
+    logical = param_logical(cfg)
+    opt = {
+        "m": _with_sharding(opt_avals["m"], logical),
+        "v": _with_sharding(opt_avals["v"], logical),
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=_named(P())),
+    }
+    return params, opt
+
+
+_DECODE_LOGICAL = {
+    # kv caches: (layers, batch, kv_seq, kv_heads, head_dim)
+    "kv": (None, "cache_batch", "kv_seq", "kv", None),
+    "shared_kv": (None, "cache_batch", "kv_seq", "kv", None),
+    "self_kv": (None, "cache_batch", "kv_seq", "kv", None),
+    "cross_self_kv": (None, "cache_batch", "kv_seq", "kv", None),
+    "cross_kv": (None, "cache_batch", "kv_seq", "kv", None),
+}
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeCell):
+    b, s = shape.global_batch, shape.seq_len
+    avals = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, s, mem_len=min(s, 4096))
+    )
+
+    def leaf_with_path(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        kv_name = next((n for n in names if n in _DECODE_LOGICAL), None)
+        if kv_name is not None:
+            ax = _DECODE_LOGICAL[kv_name][: a.ndim]
+            if a.ndim == 5:
+                ax = _DECODE_LOGICAL[kv_name]
+            else:  # stacked differently (e.g. vlm grouped kv) — batch then seq
+                ax = tuple([None] * (a.ndim - 4) + ["cache_batch", "kv_seq", "kv", None])
+        elif "img" in names or "mem" in names:
+            ax = ("batch", "kv_seq", None)
+        elif a.ndim >= 2:
+            # recurrent states: (layers..., batch, ...) -> batch on the DP axes
+            lead = a.ndim - _state_tail(names, a)
+            ax = tuple(
+                [None] * (lead - 1) + ["cache_batch"] + [None] * (a.ndim - lead)
+            )
+        else:
+            ax = tuple([None] * a.ndim)
+        spec = logical_to_spec(ax, a.shape)
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_named(spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_with_path, avals)
+
+
+def _state_tail(names, a) -> int:
+    """How many trailing dims follow the batch dim for recurrent state leaves."""
+    # groups: (G, every, B, ...) -> 2 leading; trailing/blocks: (L, B, ...) -> 1
+    if "groups" in names:
+        return a.ndim - 3
+    return a.ndim - 2

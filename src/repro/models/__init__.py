@@ -1,0 +1,21 @@
+from .model import (
+    decode_step,
+    encode_memory,
+    seed_decode_state,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_logical,
+)
+
+__all__ = [
+    "decode_step",
+    "encode_memory",
+    "seed_decode_state",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "loss_fn",
+    "param_logical",
+]

@@ -1,0 +1,180 @@
+"""GQA / sliding-window / cross attention with KV-cache decode paths.
+
+Weights:  wq (d, Hq, dh) · wk/wv (d, Hkv, dh) · wo (Hq, dh, d).
+Sharding: heads -> 'model' (TP); batch -> ('pod','data'); the KV cache carries
+(B, Hkv, S, dh) with kv-heads on 'model' when divisible, else replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+from .layers import apply_rope, init_linear, rope
+
+__all__ = [
+    "init_attn",
+    "attn_logical",
+    "attention",
+    "attention_decode",
+    "init_cache",
+]
+
+NEG_INF = -1e30
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, d_head: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, (n_heads, d_head), dtype),
+        "wk": init_linear(ks[1], d, (n_kv, d_head), dtype),
+        "wv": init_linear(ks[2], d, (n_kv, d_head), dtype),
+        "wo": (
+            jax.random.normal(ks[3], (n_heads, d_head, d), jnp.float32)
+            * (n_heads * d_head) ** -0.5
+        ).astype(dtype),
+    }
+
+
+def attn_logical():
+    return {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv", None),
+        "wv": ("embed", "kv", None),
+        "wo": ("heads", None, "embed"),
+    }
+
+
+def _proj_qkv(params, x, xk):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xk, params["wv"].astype(x.dtype))
+    return q, k, v
+
+
+def _scores_to_out(params, q, k, v, mask):
+    """q (B,Sq,Hq,dh), k/v (B,Skv,Hkv,dh); GQA by head-group reshape."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum(
+        "bqhgk,bshk->bhgqs", q, k, preferred_element_type=jnp.float32
+    ) * (dh**-0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", p, v)
+    out = out.reshape(b, sq, hq, dh)
+    out = constrain(out, ("batch", "act_seq", "heads", None))
+    return jnp.einsum(
+        "bqhk,hkd->bqd", out, params["wo"].astype(out.dtype)
+    )
+
+
+def _causal_mask(sq: int, skv: int, window: int | None):
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m[None, None, None, :, :]  # (1,1,1,Sq,Skv)
+
+
+def attention(
+    params,
+    x,
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int | None = None,
+    memory=None,
+):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``memory``: if given, cross-attention over it (no mask, no rope on memory).
+    Returns (out, (k, v)) — the kv pair for cache seeding at prefill.
+    """
+    b, s, _ = x.shape
+    xk = memory if memory is not None else x
+    q, k, v = _proj_qkv(params, x, xk)
+    if memory is None:
+        cos, sin = rope(jnp.arange(s), d_head, rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        mask = _causal_mask(s, s, window) if causal else None
+    else:
+        mask = None
+    q = constrain(q, ("batch", "act_seq", "heads", None))
+    k = constrain(k, ("batch", "act_kv_seq", "kv", None))
+    v = constrain(v, ("batch", "act_kv_seq", "kv", None))
+    out = _scores_to_out(params, q, k, v, mask)
+    return out, (k, v)
+
+
+def attention_with_kv(params, x, k, v, *, n_heads: int, n_kv: int, d_head: int):
+    """Cross-attention against PRECOMPUTED memory k/v (decode fast path).
+
+    Encoder/image memory is static during decode, so its k/v are projected once
+    at prefill and cached — re-projecting (B, S_mem, d) every token was the
+    dominant decode cost for encdec/vlm (EXPERIMENTS.md §Perf next-levers).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q = constrain(q, ("batch", "act_seq", "heads", None))
+    return _scores_to_out(params, q, k.astype(x.dtype), v.astype(x.dtype), None)
+
+
+def project_memory_kv(params, mem):
+    """Project cross-attention memory k/v once (prefill-time seeding)."""
+    k = jnp.einsum("bsd,dhk->bshk", mem, params["wk"].astype(mem.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", mem, params["wv"].astype(mem.dtype))
+    return k, v
+
+
+def init_cache(batch: int, n_kv: int, max_len: int, d_head: int, dtype):
+    """Ring/linear KV cache for one layer: (k, v) of (B, S, Hkv, dh)."""
+    shape = (batch, max_len, n_kv, d_head)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def attention_decode(
+    params,
+    x,
+    cache,
+    pos,
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    window: int | None = None,
+):
+    """One-token decode: x (B, 1, d); cache (k, v) (B, Smax, Hkv, dh); pos ().
+
+    With ``window`` the cache is a ring buffer of size window (SWA decode keeps
+    only the last W keys — how h2o-danube runs the 500k cell with O(W) memory).
+    Returns (out (B,1,d), new_cache).
+    """
+    ck, cv = cache
+    smax = ck.shape[1]
+    q, k, v = _proj_qkv(params, x, x)
+    cos, sin = rope(pos[None], d_head, rope_theta, x.dtype)  # (1, dh/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = pos % smax if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    kpos = jnp.arange(smax)
+    if window is None:
+        valid = kpos <= pos
+    else:
+        # ring buffer: slots hold positions (pos - smax, pos]; all written slots valid
+        valid = kpos <= pos  # after wrap every slot is valid; pre-wrap only <= pos
+        valid = valid | (pos >= smax)
+    mask = valid[None, None, None, None, :]
+    out = _scores_to_out(params, q, ck, cv, mask)
+    return out, (ck, cv)

@@ -1,0 +1,128 @@
+"""Shared primitive layers: norms, MLPs, embeddings, RoPE (pure functional).
+
+Params are plain nested dicts of jnp arrays; every ``init_*`` has a matching
+``*_logical`` returning the same tree with logical-axes tuples for sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+__all__ = [
+    "rms_norm",
+    "init_linear",
+    "dense",
+    "init_mlp",
+    "mlp",
+    "mlp_logical",
+    "rope",
+    "apply_rope",
+    "cross_entropy_loss",
+]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_linear(key, d_in: int, d_out, dtype, scale: float | None = None):
+    shape = (d_in, d_out) if isinstance(d_out, int) else (d_in, *d_out)
+    fan_in = d_in
+    s = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def dense(x, w):
+    """x @ w with f32 accumulation, preserving x dtype."""
+    return jax.lax.dot_general(
+        x,
+        w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d: int, ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": init_linear(ks[0], d, ff, dtype),
+        "w_out": init_linear(ks[1], ff, d, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = init_linear(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp_logical(activation: str):
+    p = {"w_in": ("embed", "ff"), "w_out": ("ff", "embed")}
+    if activation == "swiglu":
+        p["w_gate"] = ("embed", "ff")
+    return p
+
+
+def mlp(params, x, activation: str):
+    h = dense(x, params["w_in"])
+    if activation == "swiglu":
+        g = dense(x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif activation == "relu2":  # squared ReLU (nemotron / Primer)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "act_seq", "ff"))
+    return dense(h, params["w_out"])
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope(positions, d_head: int, theta: float, dtype=jnp.float32):
+    """positions (...,) -> (cos, sin) of shape (..., d_head//2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, dh//2) or (S, dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- loss
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean next-token cross entropy; logits (B, S, V) f32-cast internally."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,660 @@
+"""Model assembly: init / forward / decode for every assigned architecture family.
+
+Families: dense (deepseek/yi/nemotron/h2o-danube), moe (granite/qwen3),
+ssm (rwkv6), hybrid (zamba2: mamba2 + shared attention block), encdec
+(seamless-m4t: stubbed frame embeddings -> encoder, token decoder), vlm
+(llama-3.2-vision: stubbed patch embeddings, cross-attn every 5th layer).
+
+Structure: homogeneous blocks are *stacked* (leading n_layers dim) and driven by
+``lax.scan`` so the compiled HLO is one block body regardless of depth — this is
+what keeps 94-layer dry-run compiles tractable.  ``cfg.remat`` wraps the block
+in ``jax.checkpoint`` (activation recomputation policy for training).
+
+Params are plain nested dicts; ``param_logical(cfg)`` mirrors the tree with
+logical sharding axes consumed by repro.dist.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import cross_entropy_loss, init_linear, init_mlp, mlp, mlp_logical, rms_norm
+
+__all__ = [
+    "seed_decode_state",
+    "encode_memory",
+    "init_params",
+    "param_logical",
+    "forward",
+    "init_decode_state",
+    "decode_step",
+    "loss_fn",
+]
+
+
+def _dt(name):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def _stack_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+# ===================================================================== blocks
+def _attn_kw(cfg: ModelConfig):
+    return dict(
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def init_dense_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    dt = _dt(cfg.param_dtype)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": attn.init_attn(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.family == "moe":
+        p["mlp"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def dense_block_logical(cfg: ModelConfig):
+    return {
+        "ln1": (None,),
+        "attn": attn.attn_logical(),
+        "ln2": (None,),
+        "mlp": moe_mod.moe_logical() if cfg.family == "moe" else mlp_logical(cfg.activation),
+    }
+
+
+def dense_block(p, x, cfg: ModelConfig, memory=None):
+    """Returns (x, aux) where aux is the MoE router logits (or 0.)."""
+    h, _ = attn.attention(
+        p["attn"],
+        constrain(rms_norm(x, p["ln1"], cfg.norm_eps), ("batch", "act_seq", None)),
+        causal=True,
+        window=cfg.sliding_window,
+        **_attn_kw(cfg),
+    )
+    x = x + h
+    x = constrain(x, ("batch", "seq", None))
+    hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    hin = constrain(hin, ("batch", "act_seq", None))
+    if cfg.family == "moe":
+        h, router_logits = moe_mod.moe_ffn(
+            p["mlp"], hin, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+        aux = _load_balance_loss(router_logits, cfg)
+    else:
+        h = mlp(p["mlp"], hin, cfg.activation)
+        aux = jnp.float32(0.0)
+    x = x + h
+    return constrain(x, ("batch", "seq", None)), aux
+
+
+def _load_balance_loss(router_logits, cfg: ModelConfig):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
+    top = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top, cfg.n_experts, dtype=jnp.float32), axis=0)
+    pbar = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(f * pbar)
+
+
+def _scan_blocks(block_fn, stacked, x, remat: bool, unroll: bool = False):
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(carry, p):
+        y, aux = fn(p, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, stacked, unroll=unroll)
+    return x, jnp.sum(auxs)
+
+
+# ===================================================================== top level
+def init_params(cfg: ModelConfig, key):
+    dt = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "unembed": init_linear(ks[1], cfg.d_model, cfg.vocab, dt),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        p["blocks"] = _stack_init(lambda k: init_dense_block(k, cfg), ks[2], cfg.n_layers)
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(
+            lambda k: {
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "tm": ssm_mod.init_rwkv6(k, cfg.d_model, cfg.d_ff, cfg.n_heads, dt),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+            },
+            ks[2],
+            cfg.n_layers,
+        )
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // (every + 1)
+        trailing = cfg.n_layers - groups * (every + 1)
+        mamba_init = lambda k: {
+            "ln": jnp.ones((cfg.d_model,), dt),
+            "m": ssm_mod.init_mamba2(
+                k, cfg.d_model, cfg.ssm_expand, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_conv, dt
+            ),
+        }
+        p["groups"] = jax.vmap(
+            lambda k: _stack_init(mamba_init, k, every)
+        )(jax.random.split(ks[2], groups))
+        p["trailing"] = _stack_init(mamba_init, ks[3], max(trailing, 1))
+        p["shared_attn"] = init_dense_block(ks[4], cfg)  # ONE shared block (zamba)
+    elif fam == "encdec":
+        p["enc_blocks"] = _stack_init(
+            lambda k: init_dense_block(k, cfg), ks[2], cfg.n_enc_layers
+        )
+        p["dec_blocks"] = _stack_init(
+            lambda k: {
+                **init_dense_block(k, cfg),
+                "lnx": jnp.ones((cfg.d_model,), dt),
+                "xattn": attn.init_attn(
+                    jax.random.fold_in(k, 7), cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt
+                ),
+            },
+            ks[3],
+            cfg.n_dec_layers,
+        )
+        p["ln_enc"] = jnp.ones((cfg.d_model,), dt)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        p["groups"] = jax.vmap(
+            lambda k: {
+                "selfs": _stack_init(
+                    lambda kk: init_dense_block(kk, cfg), k, every - 1
+                ),
+                "cross": {
+                    **init_dense_block(jax.random.fold_in(k, 1), cfg),
+                    "lnx": jnp.ones((cfg.d_model,), dt),
+                    "xattn": attn.init_attn(
+                        jax.random.fold_in(k, 2), cfg.d_model, cfg.n_heads,
+                        cfg.n_kv_heads, cfg.head_dim, dt,
+                    ),
+                    "xgate": jnp.zeros((), jnp.float32),
+                },
+            }
+        )(jax.random.split(ks[2], groups))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def param_logical(cfg: ModelConfig):
+    """Same tree as init_params but with logical-axes tuples at the leaves."""
+    fam = cfg.family
+    blk = dense_block_logical(cfg)
+    p = {"embed": ("vocab", "embed"), "ln_f": (None,), "unembed": ("embed", "vocab")}
+    if fam in ("dense", "moe"):
+        p["blocks"] = _prefix_layers(blk)
+    elif fam == "ssm":
+        p["blocks"] = _prefix_layers(
+            {"ln1": (None,), "tm": ssm_mod.rwkv6_logical(), "ln2": (None,)}
+        )
+    elif fam == "hybrid":
+        mamba = {"ln": (None,), "m": ssm_mod.mamba2_logical()}
+        p["groups"] = _prefix_layers(_prefix_layers(mamba))
+        p["trailing"] = _prefix_layers(mamba)
+        p["shared_attn"] = blk
+    elif fam == "encdec":
+        p["enc_blocks"] = _prefix_layers(blk)
+        p["dec_blocks"] = _prefix_layers(
+            {**blk, "lnx": (None,), "xattn": attn.attn_logical()}
+        )
+        p["ln_enc"] = (None,)
+    elif fam == "vlm":
+        p["groups"] = _prefix_layers(
+            {
+                "selfs": _prefix_layers(blk),
+                "cross": {**blk, "lnx": (None,), "xattn": attn.attn_logical(), "xgate": ()},
+            }
+        )
+    return p
+
+
+def _prefix_layers(tree):
+    """Prepend the stacked-layers axis (None) to every logical tuple."""
+    return jax.tree.map(
+        lambda ax: (None, *ax),
+        tree,
+        is_leaf=lambda t: isinstance(t, tuple)
+        and all(isinstance(e, (str, type(None))) for e in t),
+    )
+
+
+# ===================================================================== forward
+def forward(params, cfg: ModelConfig, batch, *, logits_last_only: bool = False):
+    """Full-sequence forward.
+
+    batch: {'tokens': (B,S) i32} plus per-family extras:
+      encdec: {'frames': (B,S_enc,d)}  (stub frontend: precomputed embeddings)
+      vlm:    {'img': (B,n_img,d)}
+    ``logits_last_only``: serve-prefill mode — unembed only the final position
+    (a 32k x 151936-vocab full-logit tensor would dwarf the prefill itself).
+    Returns (logits (B,S,V) or (B,1,V), aux_loss).
+    """
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = params["embed"].astype(_dt(cfg.compute_dtype))[tokens]
+    x = constrain(x, ("batch", "seq", None))
+
+    if fam in ("dense", "moe"):
+        x, aux = _scan_blocks(lambda p, h: dense_block(p, h, cfg), params["blocks"], x, cfg.remat, cfg.scan_unroll)
+    elif fam == "ssm":
+        x, aux = _scan_blocks(
+            lambda p, h: _rwkv_block(p, h, cfg), params["blocks"], x, cfg.remat,
+            cfg.scan_unroll,
+        )
+    elif fam == "hybrid":
+        x, aux = _hybrid_forward(params, x, cfg)
+    elif fam == "encdec":
+        mem = batch["frames"].astype(x.dtype)
+        mem = constrain(mem, ("batch", "kv_seq", None))
+        mem, _ = _scan_blocks(
+            lambda p, h: _enc_block(p, h, cfg), params["enc_blocks"], mem, cfg.remat,
+            cfg.scan_unroll,
+        )
+        mem = rms_norm(mem, params["ln_enc"], cfg.norm_eps)
+        x, aux = _scan_blocks(
+            lambda p, h: _dec_block(p, h, mem, cfg), params["dec_blocks"], x, cfg.remat,
+            cfg.scan_unroll,
+        )
+    elif fam == "vlm":
+        img = batch["img"].astype(x.dtype)
+        img = constrain(img, ("batch", "img", None))
+        x, aux = _vlm_forward(params, x, img, cfg)
+    else:
+        raise ValueError(fam)
+
+    if logits_last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(x.dtype)
+    )
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def _rwkv_block(p, x, cfg: ModelConfig):
+    x = x + ssm_mod.rwkv6_timemix(
+        p["tm"], rms_norm(x, p["ln1"], cfg.norm_eps), n_heads=cfg.n_heads, chunk=cfg.ssm_chunk
+    )
+    x = x + ssm_mod.rwkv6_channelmix(p["tm"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return constrain(x, ("batch", "seq", None)), jnp.float32(0.0)
+
+
+def _mamba_block(p, x, cfg: ModelConfig):
+    h = ssm_mod.mamba2(
+        p["m"],
+        rms_norm(x, p["ln"], cfg.norm_eps),
+        expand=cfg.ssm_expand,
+        n_heads=cfg.n_ssm_heads,
+        state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+    )
+    return constrain(x + h, ("batch", "seq", None)), jnp.float32(0.0)
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig):
+    shared = params["shared_attn"]
+
+    def group_body(x, gp):
+        x, _ = _scan_blocks(
+            lambda p, h: _mamba_block(p, h, cfg), gp, x, cfg.remat, cfg.scan_unroll
+        )
+        x, _ = dense_block(shared, x, cfg)  # the ONE shared attention block
+        return x, jnp.float32(0.0)
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"], unroll=cfg.scan_unroll)
+    trailing = cfg.n_layers - (cfg.n_layers // (cfg.shared_attn_every + 1)) * (
+        cfg.shared_attn_every + 1
+    )
+    if trailing > 0:
+        x, _ = _scan_blocks(
+            lambda p, h: _mamba_block(p, h, cfg), params["trailing"], x, cfg.remat,
+            cfg.scan_unroll,
+        )
+    return x, jnp.float32(0.0)
+
+
+def _enc_block(p, x, cfg: ModelConfig):
+    h, _ = attn.attention(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), causal=False, **_attn_kw(cfg)
+    )
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return constrain(x, ("batch", "kv_seq", None)), jnp.float32(0.0)
+
+
+def _dec_block(p, x, mem, cfg: ModelConfig):
+    h, _ = attn.attention(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), causal=True, **_attn_kw(cfg)
+    )
+    x = x + h
+    hx, _ = attn.attention(
+        p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), memory=mem, **_attn_kw(cfg)
+    )
+    x = x + hx
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return constrain(x, ("batch", "seq", None)), jnp.float32(0.0)
+
+
+def _vlm_forward(params, x, img, cfg: ModelConfig):
+    def group_body(x, gp):
+        x, _ = _scan_blocks(
+            lambda p, h: dense_block(p, h, cfg), gp["selfs"], x, cfg.remat,
+            cfg.scan_unroll,
+        )
+        cp = gp["cross"]
+        x, _ = dense_block(cp, x, cfg)
+        hx, _ = attn.attention(
+            cp["xattn"], rms_norm(x, cp["lnx"], cfg.norm_eps), memory=img, **_attn_kw(cfg)
+        )
+        x = x + jnp.tanh(cp["xgate"]).astype(x.dtype) * hx
+        return constrain(x, ("batch", "seq", None)), jnp.float32(0.0)
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"], unroll=cfg.scan_unroll)
+    return x, jnp.float32(0.0)
+
+
+# ===================================================================== decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, mem_len: int = 0):
+    """Per-layer stacked decode state (KV caches / SSM states).
+
+    ``mem_len``: encoder-memory length for encdec (set at prefill time).
+    """
+    dt = _dt(cfg.compute_dtype)
+    fam = cfg.family
+    kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+    def kv(n):
+        return (
+            jnp.zeros((n, batch, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n, batch, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        )
+
+    if fam in ("dense", "moe"):
+        return {"kv": kv(cfg.n_layers)}
+    if fam == "ssm":
+        sh = lambda *s: jnp.zeros((cfg.n_layers, batch, *s))
+        hp = cfg.d_model // cfg.n_heads
+        return {
+            "shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+            "S": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, hp, hp), jnp.float32),
+            "cshift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+        }
+    if fam == "hybrid":
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // (every + 1)
+        trailing = cfg.n_layers - groups * (every + 1)
+        d_in = cfg.d_inner
+        h, pdim = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads
+        conv_dim = d_in + 2 * cfg.ssm_state
+
+        def mamba_state(*lead):
+            return (
+                jnp.zeros((*lead, batch, h, cfg.ssm_state, pdim), jnp.float32),
+                jnp.zeros((*lead, batch, cfg.ssm_conv - 1, conv_dim), dt),
+            )
+
+        return {
+            "groups": mamba_state(groups, every),
+            "trailing": mamba_state(max(trailing, 1)),
+            "shared_kv": kv(groups),
+        }
+    if fam == "encdec":
+        ml = max(mem_len, 1)
+        return {
+            "kv": kv(cfg.n_dec_layers),
+            # cross-attention k/v over the encoder memory, seeded at prefill
+            # (seed_decode_state); re-projecting memory per token was the
+            # dominant decode cost
+            "cross_kv": (
+                jnp.zeros((cfg.n_dec_layers, batch, ml, cfg.n_kv_heads, cfg.head_dim), dt),
+                jnp.zeros((cfg.n_dec_layers, batch, ml, cfg.n_kv_heads, cfg.head_dim), dt),
+            ),
+        }
+    if fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        return {
+            "self_kv": kv(groups * (every - 1)),
+            "cross_self_kv": kv(groups),
+            # precomputed patch-embedding cross k/v (seed_decode_state)
+            "cross_kv": (
+                jnp.zeros((groups, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.head_dim), dt),
+                jnp.zeros((groups, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.head_dim), dt),
+            ),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg: ModelConfig, state, token, pos):
+    """One-token decode: token (B, 1) i32, pos () i32 -> (logits (B,1,V), state)."""
+    fam = cfg.family
+    x = params["embed"].astype(_dt(cfg.compute_dtype))[token]
+    x = constrain(x, ("batch", None, None))
+    akw = _attn_kw(cfg)
+
+    def attn_block_decode(p, x, cache):
+        h, c2 = attn.attention_decode(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cache, pos,
+            window=cfg.sliding_window, **akw,
+        )
+        x = x + h
+        hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = moe_mod.moe_ffn(
+                p["mlp"], hin, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            h = mlp(p["mlp"], hin, cfg.activation)
+        return x + h, c2
+
+    if fam in ("dense", "moe"):
+        def body(x, inp):
+            p, ck, cv = inp
+            y, (ck2, cv2) = attn_block_decode(p, x, (ck, cv))
+            return y, (ck2, cv2)
+
+        ck, cv = state["kv"]
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], ck, cv), unroll=cfg.scan_unroll)
+        state = {"kv": (ck, cv)}
+    elif fam == "ssm":
+        def body(x, inp):
+            p, shift, S, cshift = inp
+            h, (shift2, S2, _) = ssm_mod.rwkv6_timemix_decode(
+                p["tm"], rms_norm(x, p["ln1"], cfg.norm_eps), (shift, S, cshift),
+                n_heads=cfg.n_heads,
+            )
+            x = x + h
+            h, cshift2 = ssm_mod.rwkv6_channelmix_decode(
+                p["tm"], rms_norm(x, p["ln2"], cfg.norm_eps), cshift
+            )
+            return x + h, (shift2, S2, cshift2)
+
+        x, (sh, S, csh) = jax.lax.scan(
+            body, x, (params["blocks"], state["shift"], state["S"], state["cshift"]),
+            unroll=cfg.scan_unroll,
+        )
+        state = {"shift": sh, "S": S, "cshift": csh}
+    elif fam == "hybrid":
+        def mamba_decode(p, x, st):
+            h, st2 = ssm_mod.mamba2_decode(
+                p["m"], rms_norm(x, p["ln"], cfg.norm_eps),
+                st, expand=cfg.ssm_expand, n_heads=cfg.n_ssm_heads, state=cfg.ssm_state,
+            )
+            return x + h, st2
+
+        def group_body(x, inp):
+            gp, hS, hconv, ck, cv = inp
+
+            def inner(x, minp):
+                p, s1, s2 = minp
+                y, (s1b, s2b) = mamba_decode(p, x, (s1, s2))
+                return y, (s1b, s2b)
+
+            x, (hS2, hconv2) = jax.lax.scan(
+                inner, x, (gp, hS, hconv), unroll=cfg.scan_unroll
+            )
+            y, (ck2, cv2) = attn_block_decode(params["shared_attn"], x, (ck, cv))
+            return y, (hS2, hconv2, ck2, cv2)
+
+        hS, hconv = state["groups"]
+        ck, cv = state["shared_kv"]
+        x, (hS, hconv, ck, cv) = jax.lax.scan(
+            group_body, x, (params["groups"], hS, hconv, ck, cv),
+            unroll=cfg.scan_unroll,
+        )
+        tS, tconv = state["trailing"]
+        trailing = cfg.n_layers - (cfg.n_layers // (cfg.shared_attn_every + 1)) * (
+            cfg.shared_attn_every + 1
+        )
+        if trailing > 0:
+            def inner(x, minp):
+                p, s1, s2 = minp
+                y, (s1b, s2b) = mamba_decode(p, x, (s1, s2))
+                return y, (s1b, s2b)
+
+            x, (tS, tconv) = jax.lax.scan(
+                inner, x, (params["trailing"], tS, tconv), unroll=cfg.scan_unroll
+            )
+        state = {"groups": (hS, hconv), "trailing": (tS, tconv), "shared_kv": (ck, cv)}
+    elif fam == "encdec":
+        xk, xv = state["cross_kv"]
+
+        def body(x, inp):
+            p, ck, cv, xkl, xvl = inp
+            h, (ck2, cv2) = attn.attention_decode(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), (ck, cv), pos, **akw
+            )
+            x = x + h
+            hx = attn.attention_with_kv(
+                p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), xkl, xvl,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            )
+            x = x + hx
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+            return x, (ck2, cv2)
+
+        ck, cv = state["kv"]
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["dec_blocks"], ck, cv, xk, xv), unroll=cfg.scan_unroll
+        )
+        state = {"kv": (ck, cv), "cross_kv": (xk, xv)}
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        sck, scv = state["self_kv"]
+        sck = sck.reshape(groups, every - 1, *sck.shape[1:])
+        scv = scv.reshape(groups, every - 1, *scv.shape[1:])
+        cck, ccv = state["cross_self_kv"]
+        xk, xv = state["cross_kv"]
+
+        def group_body(x, inp):
+            gp, sck_g, scv_g, cck_g, ccv_g, xk_g, xv_g = inp
+
+            def inner(x, minp):
+                p, ck, cv = minp
+                y, (ck2, cv2) = attn_block_decode(p, x, (ck, cv))
+                return y, (ck2, cv2)
+
+            x, (sck_g, scv_g) = jax.lax.scan(
+                inner, x, (gp["selfs"], sck_g, scv_g), unroll=cfg.scan_unroll
+            )
+            cp = gp["cross"]
+            x, (cck_g, ccv_g) = attn_block_decode(cp, x, (cck_g, ccv_g))
+            hx = attn.attention_with_kv(
+                cp["xattn"], rms_norm(x, cp["lnx"], cfg.norm_eps), xk_g, xv_g,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            )
+            x = x + jnp.tanh(cp["xgate"]).astype(x.dtype) * hx
+            return x, (sck_g, scv_g, cck_g, ccv_g)
+
+        x, (sck, scv, cck, ccv) = jax.lax.scan(
+            group_body, x, (params["groups"], sck, scv, cck, ccv, xk, xv),
+            unroll=cfg.scan_unroll,
+        )
+        state = {
+            "self_kv": (sck.reshape(-1, *sck.shape[2:]), scv.reshape(-1, *scv.shape[2:])),
+            "cross_self_kv": (cck, ccv),
+            "cross_kv": (xk, xv),
+        }
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return logits, state
+
+
+def seed_decode_state(params, cfg: ModelConfig, state, memory):
+    """Fill the precomputed cross-attention k/v from encoder/image memory.
+
+    encdec: ``memory`` is the ENCODED frames (run the encoder + ln_enc first);
+    vlm: ``memory`` is the patch-embedding stub input.
+    """
+    from . import attention as attn_mod
+
+    if cfg.family == "encdec":
+        ks, vs = jax.vmap(
+            lambda p: attn_mod.project_memory_kv(p, memory)
+        )(params["dec_blocks"]["xattn"])
+        state = dict(state)
+        state["cross_kv"] = (ks, vs)
+        return state
+    if cfg.family == "vlm":
+        ks, vs = jax.vmap(
+            lambda p: attn_mod.project_memory_kv(p, memory)
+        )(params["groups"]["cross"]["xattn"])
+        state = dict(state)
+        state["cross_kv"] = (ks, vs)
+        return state
+    return state
+
+
+def encode_memory(params, cfg: ModelConfig, frames):
+    """Run the encoder stack (encdec prefill side): frames -> memory."""
+    from .model import _enc_block, _scan_blocks  # self-import safe at runtime
+
+    mem, _ = _scan_blocks(
+        lambda p, h: _enc_block(p, h, cfg), params["enc_blocks"], frames,
+        cfg.remat, cfg.scan_unroll,
+    )
+    return rms_norm(mem, params["ln_enc"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """Next-token LM loss (+ MoE aux) — the train-step objective."""
+    logits, aux = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    return cross_entropy_loss(logits, labels, mask) + aux_weight * aux

@@ -1,0 +1,140 @@
+"""Top-k routed mixture-of-experts FFN (granite-moe, qwen3-moe).
+
+Implementation is the *sorted dispatch* scheme (grouped-GEMM style): flatten
+(token, choice) pairs, sort by expert, keep up to ``capacity`` pairs per expert,
+gather tokens into an (E, C, d) buffer, run the expert FFNs as one batched
+einsum, and scatter-add gated outputs back.  FLOPs are the *active* count
+(T·top_k·3·d·ff), unlike a dense-all-experts fallback.
+
+Sharding: the (E, C, d) dispatch buffer and expert weights carry the 'expert'
+logical axis -> 'model' mesh axis (EP) when E divides it; otherwise expert
+weights shard their ff dim (TP fallback — granite's E=40 on a 16-way axis).
+GSPMD materializes the dispatch/return traffic as all-to-alls over 'model'.
+
+The router's top-k is exactly the paper's k-selection primitive (DESIGN.md §4):
+``repro.kernels.topk_select`` implements it on TPU; here we use lax.top_k so the
+roofline of the LM cells reflects the XLA path (the kernel is benchmarked
+separately in benchmarks/kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+from .layers import init_linear
+
+__all__ = ["init_moe", "moe_logical", "moe_ffn"]
+
+
+def init_moe(key, d: int, ff: int, n_experts: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_linear(ks[0], d, n_experts, jnp.float32),
+        "w_in": (
+            jax.random.normal(ks[1], (n_experts, d, ff), jnp.float32) * d**-0.5
+        ).astype(dtype),
+        "w_gate": (
+            jax.random.normal(ks[2], (n_experts, d, ff), jnp.float32) * d**-0.5
+        ).astype(dtype),
+        "w_out": (
+            jax.random.normal(ks[3], (n_experts, ff, d), jnp.float32) * ff**-0.5
+        ).astype(dtype),
+    }
+
+
+def moe_logical():
+    return {
+        "router": ("embed", None),
+        "w_in": ("expert", "embed", "ff"),
+        "w_gate": ("expert", "embed", "ff"),
+        "w_out": ("expert", "ff", "embed"),
+    }
+
+
+def moe_ffn(params, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25):
+    """x (B, S, d) -> (B, S, d) via top-k routed experts.
+
+    Routing uses the *inverse-index* formulation (EXPERIMENTS.md §Perf, iteration
+    Q2): per batch row we build ``inv_token[e*C+c] -> token`` and a matching
+    per-slot gate.  Then
+
+      * dispatch is a GATHER ``xd[e,c] = x[inv_token[e,c]]`` — each expert
+        (model) shard gathers only its slots, locally;
+      * combine is a SOURCE-DRIVEN scatter-add of gated expert outputs back to
+        token positions — each shard contributes partial sums and GSPMD emits
+        one small (B,S,d) all-reduce over 'model' instead of all-gathering the
+        whole (B,E,C,d) buffer.
+
+    Both directions' transposes (gather<->scatter-add) keep the same property
+    in the backward pass.
+    """
+    b, s, d = x.shape
+    logits = (
+        x.reshape(-1, d).astype(jnp.float32) @ params["router"]
+    ).astype(jnp.float32)  # (B*S, E) — kept flat for the aux loss
+    probs = jax.nn.softmax(logits.reshape(b, s, n_experts), axis=-1)
+    gate, expert = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, round(s * top_k / n_experts * capacity_factor)))
+    n_slots = n_experts * cap
+
+    def route_row(expert_r, gate_r):
+        """One batch row -> (inv_token (E*C,), gate_slot (E*C,)).
+
+        Unfilled/dropped slots point at the dummy token index ``s`` (a zero row)
+        with gate 0, so they contribute nothing in either direction.
+        """
+        flat_e = expert_r.reshape(-1).astype(jnp.int32)  # (S*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        token_of = (order // top_k).astype(jnp.int32)
+        counts = jnp.sum(
+            jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32), axis=0
+        )  # (E,)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(s * top_k, dtype=jnp.int32) - starts[sorted_e]
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, sorted_e * cap + pos_in_e, n_slots)  # drop bin
+        gates_sorted = gate_r.reshape(-1)[order]
+        inv_token = (
+            jnp.full((n_slots + 1,), s, jnp.int32).at[slot].set(token_of)[:n_slots]
+        )
+        gate_slot = (
+            jnp.zeros((n_slots + 1,), jnp.float32).at[slot].set(gates_sorted)[:n_slots]
+        )
+        return inv_token, gate_slot
+
+    inv_token, gate_slot = jax.vmap(route_row)(expert, gate)  # (B, E*C) each
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    # shard the *indices* in the expert layout first: the gather output then
+    # follows the index sharding and never materializes the full (E*C, d) buffer
+    inv3 = constrain(
+        inv_token.reshape(b, n_experts, cap), ("batch", "expert", "expert_cap")
+    )
+    gate3 = constrain(
+        gate_slot.reshape(b, n_experts, cap), ("batch", "expert", "expert_cap")
+    )
+
+    # dispatch: expert-shard-local gather
+    xd = jax.vmap(lambda xr, iv: xr[iv])(x_pad, inv3)  # (B, E, C, d)
+    xd = constrain(xd, ("batch", "expert", "expert_cap", None))
+
+    h = jnp.einsum("becd,edf->becf", xd, params["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", xd, params["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    h = constrain(h, ("batch", "expert", "expert_cap", "ff"))
+    y_e = jnp.einsum("becf,efd->becd", h, params["w_out"].astype(x.dtype))
+    y_e = constrain(y_e, ("batch", "expert", "expert_cap", None))
+
+    # combine: gated source-driven scatter-add (partial sums over 'model')
+    def combine_row(y_er, iv, gs):
+        contrib = y_er * gs[..., None].astype(y_er.dtype)  # (E, C, d)
+        return jnp.zeros((s + 1, d), y_er.dtype).at[iv].add(contrib)[:s]
+
+    y = jax.vmap(combine_row)(y_e, inv3, gate3)  # (B, S, d)
+    y = constrain(y, ("batch", "seq", None))
+    return y, logits

@@ -1,0 +1,378 @@
+"""State-space sequence mixers: Mamba2 (SSD, zamba2-7b) and RWKV6 (rwkv6-3b).
+
+Both are implemented in the *chunked* form: quadratic attention-like einsums
+within a chunk (vectorized over all chunks) + a short ``lax.scan`` over chunk
+states.  This keeps the compiled program small (rolled scan), the FLOPs count
+faithful, and gives O(chunk) not O(L^2) cost — which is what makes these archs
+eligible for the ``long_500k`` cell (DESIGN.md §5).
+
+Decode paths carry recurrent state explicitly:
+  mamba2: (h (B,H,P,N), conv window (B,K-1,Cdim))
+  rwkv6:  (S (B,H,P,P), token-shift (B,d) x2)
+
+Simplifications vs the full releases (noted per instructions): RWKV6 keeps the
+*data-dependent decay* (the Finch contribution) via its LoRA, but uses static
+token-shift mix coefficients for r/k/v/g; Mamba2 uses G=1 B/C groups.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+from .layers import init_linear, rms_norm
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_logical",
+    "mamba2",
+    "mamba2_decode",
+    "init_mamba2_state",
+    "init_rwkv6",
+    "rwkv6_logical",
+    "rwkv6_timemix",
+    "rwkv6_channelmix",
+    "rwkv6_timemix_decode",
+    "rwkv6_channelmix_decode",
+    "init_rwkv6_state",
+]
+
+
+# ===================================================================== Mamba2
+def _mamba_dims(d_model: int, expand: int, n_heads: int, state: int):
+    d_in = expand * d_model
+    h = n_heads
+    p = d_in // h
+    conv_dim = d_in + 2 * state  # x, B, C share the causal conv
+    return d_in, h, p, conv_dim
+
+
+def init_mamba2(key, d_model: int, expand: int, n_heads: int, state: int, conv: int, dtype):
+    d_in, h, p, conv_dim = _mamba_dims(d_model, expand, n_heads, state)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_in + 2 * state + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": init_linear(ks[2], d_in, d_model, dtype),
+    }
+
+
+def mamba2_logical():
+    return {
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": (None,),
+        "out_proj": ("ff", "embed"),
+    }
+
+
+def _mamba_split(params, x, d_in: int, state: int, h: int):
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + state, 2 * d_in + 2 * state], axis=-1
+    )
+    return z, xc, B, C, dt
+
+
+def _causal_conv(xbc, w, b, window=None):
+    """Depthwise causal conv over (B, L, Cdim); kernel (K, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba2(params, x, *, expand: int, n_heads: int, state: int, chunk: int):
+    """x (B, L, d) -> (B, L, d); L must be a multiple of ``chunk``."""
+    bsz, L, d_model = x.shape
+    d_in, h, p, conv_dim = _mamba_dims(d_model, expand, n_heads, state)
+    z, xc, B, C, dt = _mamba_split(params, x, d_in, state, h)
+    xbc = _causal_conv(
+        jnp.concatenate([xc, B, C], -1), params["conv_w"], params["conv_b"]
+    )
+    xc, B, C = jnp.split(xbc, [d_in, d_in + state], axis=-1)
+    f32 = jnp.float32
+    xh = xc.reshape(bsz, L, h, p).astype(f32)
+    Bh = B.astype(f32)  # (B, L, N)  (G=1 group, shared across heads)
+    Ch = C.astype(f32)
+    dt = jax.nn.softplus(dt.astype(f32) + params["dt_bias"][None, None, :])  # (B,L,H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+
+    nc = L // chunk
+    c = chunk
+    xh = xh.reshape(bsz, nc, c, h, p)
+    Bh = Bh.reshape(bsz, nc, c, state)
+    Ch = Ch.reshape(bsz, nc, c, state)
+    dt = dt.reshape(bsz, nc, c, h)
+    lam = dt * a[None, None, None, :]  # per-step log decay (B,nc,c,H)
+    ell = jnp.cumsum(lam, axis=2)  # inclusive cumulative (B,nc,c,H)
+
+    # intra-chunk (attention-like): M[t,s] = C_t.B_s * exp(ell_t - ell_s) * [s<=t]
+    cb = jnp.einsum("bnts,bnus->bntu", Ch, Bh)  # (B,nc,c,c) (t,u)=(t,s)
+    dec = jnp.exp(
+        jnp.clip(ell[:, :, :, None, :] - ell[:, :, None, :, :], -60.0, 0.0)
+    )  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    m = cb[..., None] * dec * tri[None, None, :, :, None]  # (B,nc,t,s,H)
+    xdt = xh * dt[..., None]  # (B,nc,c,H,P)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", m, xdt)
+
+    # chunk summary states: S_n = sum_s exp(ell_c - ell_s) dt_s B_s (x) x_s
+    dec_end = jnp.exp(jnp.clip(ell[:, :, -1:, :] - ell, -60.0, 0.0))  # (B,nc,c,H)
+    s_chunk = jnp.einsum("bnsh,bnsv,bnshp->bnhvp", dec_end, Bh, xdt)  # (B,nc,H,N,P)
+    lam_chunk = jnp.exp(jnp.clip(ell[:, :, -1, :], -60.0, 0.0))  # (B,nc,H)
+
+    def scan_body(hprev, inp):
+        s_n, lam_n = inp  # (B,H,N,P), (B,H)
+        return hprev * lam_n[:, :, None, None] + s_n, hprev
+
+    hs = jnp.zeros((bsz, h, state, p), f32)
+    _, h_starts = jax.lax.scan(
+        scan_body,
+        hs,
+        (s_chunk.transpose(1, 0, 2, 3, 4), lam_chunk.transpose(1, 0, 2)),
+    )
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state at chunk start
+
+    # inter-chunk: y_t += C_t . (exp(ell_t) * H_start) — INCLUSIVE decay, because
+    # y_t reads h_t *after* this step's decay+update (h_t = e^{l_t} h_0 + ...),
+    # unlike RWKV where y_t reads the pre-update state S_{t-1}.
+    dec_in = jnp.exp(jnp.clip(ell, -60.0, 0.0))  # (B,nc,c,H)
+    y_inter = jnp.einsum("bntv,bnhvp,bnth->bnthp", Ch, h_starts, dec_in)
+
+    y = y_intra + y_inter + xh * params["D"][None, None, None, :, None]
+    y = y.reshape(bsz, L, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(f32)).astype(x.dtype), params["norm"])
+    y = constrain(y, ("batch", "act_seq", "ff"))
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def init_mamba2_state(batch: int, d_model: int, expand: int, n_heads: int, state: int, conv: int, dtype):
+    d_in, h, p, conv_dim = _mamba_dims(d_model, expand, n_heads, state)
+    return (
+        jnp.zeros((batch, h, state, p), jnp.float32),
+        jnp.zeros((batch, conv - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(params, x, st, *, expand: int, n_heads: int, state: int):
+    """One-token step: x (B, 1, d), st = (h, conv_window)."""
+    bsz, _, d_model = x.shape
+    d_in, h, p, conv_dim = _mamba_dims(d_model, expand, n_heads, state)
+    hstate, convw = st
+    z, xc, B, C, dt = _mamba_split(params, x, d_in, state, h)
+    xbc_new = jnp.concatenate([xc, B, C], -1)  # (B,1,Cdim)
+    win = jnp.concatenate([convw, xbc_new], axis=1)  # (B,K,Cdim)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        (win * w[None, :, :]).sum(axis=1) + params["conv_b"][None, :].astype(x.dtype)
+    )  # (B,Cdim)
+    xc1, B1, C1 = jnp.split(conv_out, [d_in, d_in + state], axis=-1)
+    f32 = jnp.float32
+    xh = xc1.reshape(bsz, h, p).astype(f32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(f32) + params["dt_bias"][None, :])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    lam = jnp.exp(dt1 * a[None, :])  # (B,H)
+    outer = jnp.einsum("bv,bhp->bhvp", B1.astype(f32), xh * dt1[..., None])
+    hnew = hstate * lam[:, :, None, None] + outer
+    y = jnp.einsum("bv,bhvp->bhp", C1.astype(f32), hnew) + xh * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(f32)).astype(x.dtype), params["norm"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, (hnew, win[:, 1:])
+
+
+# ===================================================================== RWKV6
+def init_rwkv6(key, d: int, ff: int, n_heads: int, dtype, lora_rank: int = 64):
+    p = d // n_heads
+    ks = jax.random.split(key, 12)
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "wr": init_linear(ks[1], d, d, dtype),
+        "wk": init_linear(ks[2], d, d, dtype),
+        "wv": init_linear(ks[3], d, d, dtype),
+        "wg": init_linear(ks[4], d, d, dtype),
+        "wo": init_linear(ks[5], d, d, dtype),
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.1 - 6.0),
+        "w_lora_a": init_linear(ks[7], d, lora_rank, jnp.float32),
+        "w_lora_b": init_linear(ks[8], lora_rank, d, jnp.float32, scale=0.01),
+        "u": (jax.random.normal(ks[9], (n_heads, p), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "mix_c": (jax.random.uniform(ks[10], (2, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "ck": init_linear(ks[11], d, ff, dtype),
+        "cv": init_linear(jax.random.fold_in(key, 99), ff, d, dtype),
+        "cr": init_linear(jax.random.fold_in(key, 98), d, d, dtype),
+    }
+
+
+def rwkv6_logical():
+    return {
+        "mix": (None, "embed"),
+        "wr": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wg": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+        "w0": ("embed",),
+        "w_lora_a": ("embed", None),
+        "w_lora_b": (None, "embed"),
+        "u": ("heads", None),
+        "ln_x": ("embed",),
+        "mix_c": (None, "embed"),
+        "ck": ("embed", "ff"),
+        "cv": ("ff", "embed"),
+        "cr": ("embed", None),
+    }
+
+
+def _shift(x):
+    """Token shift: x_{t-1} (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _rwkv_proj(params, x, xx):
+    mix = params["mix"]  # (5, d): r, k, v, g, w
+
+    def mixed(i):
+        m = mix[i][None, None, :].astype(x.dtype)
+        return x + (xx - x) * m
+
+    r = mixed(0) @ params["wr"].astype(x.dtype)
+    k = mixed(1) @ params["wk"].astype(x.dtype)
+    v = mixed(2) @ params["wv"].astype(x.dtype)
+    g = jax.nn.silu(mixed(3) @ params["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    xw = mixed(4).astype(jnp.float32)
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(params["w0"][None, None, :] + lora, -20.0, 8.0))
+    return r, k, v, g, logw  # logw = log(decay) in (-inf, 0)
+
+
+def rwkv6_timemix(params, x, *, n_heads: int, chunk: int, norm_eps: float = 1e-5):
+    """RWKV6 time mixing, chunked: x (B, L, d) -> (B, L, d)."""
+    bsz, L, d = x.shape
+    hp = d // n_heads
+    r, k, v, g, logw = _rwkv_proj(params, x, _shift(x))
+    f32 = jnp.float32
+    nc = L // chunk
+    c = chunk
+
+    def heads(t):
+        return t.reshape(bsz, nc, c, n_heads, hp).astype(f32)
+
+    r, k, v = heads(r), heads(k), heads(v)
+    logw = logw.reshape(bsz, nc, c, n_heads, hp)
+    ell = jnp.cumsum(logw, axis=2)  # inclusive (B,nc,c,H,P)
+
+    # intra-chunk: y_t = sum_{s<t} [r_t * exp(ell_{t-1}-ell_s)] . k_s  v_s  + bonus
+    ell_prev = ell - logw  # ell_{t-1}
+    # factorized decay: exp(ell_prev_t - ell_s) = exp(ell_prev_t) * exp(-ell_s);
+    # cumulative logs are clipped to [-60, 0] so both factors stay finite in f32.
+    att = jnp.einsum(
+        "bnthp,bnshp->bnhts",
+        r * jnp.exp(jnp.clip(ell_prev, -60.0, 0.0)),
+        k * jnp.exp(jnp.clip(-ell, 0.0, 60.0)),
+    )
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = att * tri[None, None, None, :, :]
+    y = jnp.einsum("bnhts,bnshp->bnthp", att, v)
+    bonus = jnp.einsum("bnthp,bnthp->bnth", r, k * params["u"][None, None, None, :, :])
+    y = y + bonus[..., None] * v
+
+    # inter-chunk state: S (B,H,P,P) [key-dim, value-dim]
+    dec_end = jnp.exp(jnp.clip(ell[:, :, -1:, :, :] - ell, -60.0, 0.0))  # (B,nc,c,H,P)
+    s_chunk = jnp.einsum("bnshp,bnshv->bnhpv", k * dec_end, v)
+    lam_chunk = jnp.exp(jnp.clip(ell[:, :, -1, :, :], -60.0, 0.0))  # (B,nc,H,P)
+
+    def scan_body(sprev, inp):
+        s_n, lam_n = inp
+        return sprev * lam_n[..., None] + s_n, sprev
+
+    s0 = jnp.zeros((bsz, n_heads, hp, hp), f32)
+    _, s_starts = jax.lax.scan(
+        scan_body,
+        s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), lam_chunk.transpose(1, 0, 2, 3)),
+    )
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,P)
+    y_inter = jnp.einsum(
+        "bnthp,bnhpv->bnthv", r * jnp.exp(jnp.clip(ell_prev, -60.0, 0.0)), s_starts
+    )
+    y = (y + y_inter).reshape(bsz, L, d)
+    # group-norm per head (ln_x), gate, output proj
+    y = y.reshape(bsz, L, n_heads, hp)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + norm_eps)
+    y = y.reshape(bsz, L, d) * params["ln_x"][None, None, :]
+    y = (y.astype(x.dtype) * g)
+    return y @ params["wo"].astype(x.dtype)
+
+
+def rwkv6_channelmix(params, x):
+    xx = _shift(x)
+    mix = params["mix_c"]
+    xk = x + (xx - x) * mix[0][None, None, :].astype(x.dtype)
+    xr = x + (xx - x) * mix[1][None, None, :].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"].astype(x.dtype)))
+    kk = constrain(kk, ("batch", "act_seq", "ff"))
+    return jax.nn.sigmoid(xr @ params["cr"].astype(x.dtype)) * (
+        kk @ params["cv"].astype(x.dtype)
+    )
+
+
+def init_rwkv6_state(batch: int, d: int, n_heads: int, dtype):
+    hp = d // n_heads
+    return (
+        jnp.zeros((batch, d), dtype),  # time-mix token shift
+        jnp.zeros((batch, n_heads, hp, hp), jnp.float32),  # wkv state
+        jnp.zeros((batch, d), dtype),  # channel-mix token shift
+    )
+
+
+def rwkv6_timemix_decode(params, x, st, *, n_heads: int, norm_eps: float = 1e-5):
+    """One-token step: x (B, 1, d); st = (shift, S, cshift) -> (y, new_st)."""
+    bsz, _, d = x.shape
+    hp = d // n_heads
+    shift, S, cshift = st
+    r, k, v, g, logw = _rwkv_proj(params, x, shift[:, None, :])
+    f32 = jnp.float32
+    r1 = r[:, 0].reshape(bsz, n_heads, hp).astype(f32)
+    k1 = k[:, 0].reshape(bsz, n_heads, hp).astype(f32)
+    v1 = v[:, 0].reshape(bsz, n_heads, hp).astype(f32)
+    w1 = jnp.exp(logw[:, 0].reshape(bsz, n_heads, hp))  # decay in (0,1)
+    kv = jnp.einsum("bhp,bhv->bhpv", k1, v1)
+    y = jnp.einsum("bhp,bhpv->bhv", r1, S + params["u"][None, :, :, None] * kv)
+    S_new = S * w1[..., None] + kv
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + norm_eps)
+    y = y.reshape(bsz, 1, d) * params["ln_x"][None, None, :]
+    y = y.astype(x.dtype) * g
+    out = y @ params["wo"].astype(x.dtype)
+    return out, (x[:, 0, :], S_new, cshift)
+
+
+def rwkv6_channelmix_decode(params, x, cshift):
+    xx = cshift[:, None, :]
+    mix = params["mix_c"]
+    xk = x + (xx - x) * mix[0][None, None, :].astype(x.dtype)
+    xr = x + (xx - x) * mix[1][None, None, :].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ params["cr"].astype(x.dtype)) * (
+        kk @ params["cv"].astype(x.dtype)
+    )
+    return out, x[:, 0, :]

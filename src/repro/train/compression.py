@@ -1,0 +1,59 @@
+"""Cross-pod gradient compression (int8 + error feedback) over the slow DCN hop.
+
+Within a pod, gradient reduction rides the fast ICI via GSPMD's automatic
+psums.  *Across* pods the link is DCN — an order of magnitude slower — so the
+cross-pod mean is the place to compress.  We run the whole train step inside
+``jax.shard_map`` with only the ``pod`` axis manual (``axis_names={'pod'}``;
+``data``/``model`` stay auto/GSPMD), quantize each gradient leaf to int8 with a
+per-leaf amax scale, exchange the int8 payload + f32 scale with
+``lax.all_gather`` over ``pod``, and dequantize+mean locally.
+
+Collective-bytes accounting (what the dry-run measures): a bf16 psum over 2
+pods moves ~2x the gradient bytes; the int8 all-gather moves ~1x — a ~2x cut
+of the DCN term, at the cost of <=0.4% quantization error per step (bounded by
+error feedback, which carries the residual to the next step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["crosspod_mean_int8", "crosspod_mean", "init_error_feedback"]
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def crosspod_mean_int8(grads, err, axis: str = "pod"):
+    """Per-leaf int8 all-gather mean over ``axis`` with error feedback.
+
+    Must run inside shard_map with ``axis`` manual.  Returns (mean_grads, new_err).
+    """
+    npod = jax.lax.axis_size(axis)
+
+    def leaf(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = _quantize(g)
+        new_e = g - q.astype(jnp.float32) * scale  # residual carried forward
+        qs = jax.lax.all_gather(q, axis)  # (npod, ...) int8 on the wire
+        ss = jax.lax.all_gather(scale, axis)  # (npod,) f32
+        deq = (qs.astype(jnp.float32) * ss.reshape((npod,) + (1,) * g.ndim)).mean(0)
+        return deq, new_e
+
+    out = jax.tree.map(leaf, grads, err)
+    mean = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    return mean, new_err
+
+
+def crosspod_mean(grads, axis: str = "pod"):
+    """Uncompressed baseline: f32 psum-mean over the pod axis."""
+    return jax.tree.map(lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads)

@@ -1,0 +1,120 @@
+"""Train-step builders: plain GSPMD step and the shard_map cross-pod variant.
+
+``make_train_step``  — jit + GSPMD everywhere (baseline; gradient reduction over
+                       batch axes is inserted automatically by SPMD autodiff).
+``make_train_step_crosspod`` — the whole step under ``jax.shard_map`` with only
+                       the ``pod`` axis manual, so the cross-pod (DCN) gradient
+                       exchange is explicit and optionally int8-compressed
+                       (train/compression.py).  data/model stay auto (GSPMD).
+
+Both support microbatch gradient accumulation (``accum`` sequential microsteps
+via lax.scan — overlap-friendly and memory-bounded).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.train.compression import crosspod_mean, crosspod_mean_int8
+from repro.train.optimizer import OptConfig, adamw_update, clip_by_global_norm
+
+__all__ = ["make_train_step", "make_train_step_crosspod", "grads_and_loss"]
+
+
+def grads_and_loss(params, cfg: ModelConfig, batch, accum: int = 1):
+    """(loss, grads) with optional sequential microbatch accumulation."""
+    if accum <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        return loss, grads
+
+    def micro(i, batch):
+        return jax.tree.map(lambda x: x.reshape(accum, -1, *x.shape[1:])[i], batch)
+
+    def body(carry, i):
+        loss_acc, g_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, micro(i, batch))
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (loss_acc + loss, g_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), g0), jnp.arange(accum))
+    scale = 1.0 / accum
+    return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, accum: int = 1):
+    """Plain GSPMD step: (params, opt, batch) -> (params, opt, metrics)."""
+
+    def step(params, opt, batch):
+        loss, grads = grads_and_loss(params, cfg, batch, accum)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_train_step_crosspod(
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    mesh,
+    *,
+    compress: bool = True,
+    accum: int = 1,
+):
+    """shard_map(pod-manual) step with explicit (optionally int8) DCN exchange.
+
+    State gains an ``err`` leaf-tree (error feedback) when compressing.
+    Batch enters pod-sharded on axis 0; params/opt are replicated across pods
+    (FSDP over 'data' continues inside via GSPMD auto mode).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import use_rules
+
+    def inner(params, opt, err, batch):
+        # inside the pod-manual region, activation specs must not mention the
+        # manual axis: rebind batch -> 'data' only (pod sharding is implicit)
+        with use_rules(mesh, {"batch": "data"}):
+            loss, grads = grads_and_loss(params, cfg, batch, accum)
+        if compress:
+            grads, err = crosspod_mean_int8(grads, err, "pod")
+        else:
+            grads = crosspod_mean(grads, "pod")
+        loss = jax.lax.pmean(loss, "pod")
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, err, {"loss": loss, "grad_norm": gnorm}
+
+    rep = P()  # replicated w.r.t. pod (manual axis); inner axes stay auto
+
+    def batch_spec(batch):
+        return jax.tree.map(lambda _: P("pod"), batch)
+
+    def step(params, opt, err, batch):
+        f = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: rep, params),
+                jax.tree.map(lambda _: rep, opt),
+                jax.tree.map(lambda _: rep, err),
+                batch_spec(batch),
+            ),
+            out_specs=(
+                jax.tree.map(lambda _: rep, params),
+                jax.tree.map(lambda _: rep, opt),
+                jax.tree.map(lambda _: rep, err),
+                {"loss": rep, "grad_norm": rep},
+            ),
+            axis_names={"pod"},
+            check_vma=False,
+        )
+        return f(params, opt, err, batch)
+
+    return step

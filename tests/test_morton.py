@@ -1,0 +1,69 @@
+"""Property tests for Morton coding (the structural backbone of the index)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import morton
+
+coords = st.integers(min_value=0, max_value=(1 << 15) - 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=64))
+def test_encode_decode_roundtrip(cells):
+    cx = jnp.asarray([c[0] for c in cells], jnp.int32)
+    cy = jnp.asarray([c[1] for c in cells], jnp.int32)
+    z = morton.encode_cells(cx, cy)
+    dx, dy = morton.decode_code(z)
+    assert (np.asarray(dx) == np.asarray(cx)).all()
+    assert (np.asarray(dy) == np.asarray(cy)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.tuples(coords, coords), st.integers(0, 7))
+def test_ancestor_prefix_property(cell, up):
+    """z' = z >> 2u is the Morton code of the ancestor u levels up (paper 4.1.1)."""
+    cx, cy = cell
+    z = morton.encode_cells(jnp.asarray([cx]), jnp.asarray([cy]))
+    zu = z >> (2 * up)
+    ax, ay = morton.decode_code(zu)
+    assert int(ax[0]) == cx >> up
+    assert int(ay[0]) == cy >> up
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.floats(0, 999.99), st.floats(0, 999.99)),
+        min_size=2,
+        max_size=64,
+    ),
+    st.integers(2, 8),
+)
+def test_same_cell_same_code(points, level):
+    """Points in the same grid cell share a code; codes respect cell identity."""
+    pts = jnp.asarray(points, jnp.float32)
+    origin = jnp.zeros(2)
+    z = morton.morton_encode_points(pts, origin, 1000.0, level)
+    n = 1 << level
+    cell = np.floor(np.asarray(pts) / 1000.0 * n).clip(0, n - 1).astype(int)
+    for i in range(len(points)):
+        for j in range(len(points)):
+            same_cell = (cell[i] == cell[j]).all()
+            assert (int(z[i]) == int(z[j])) == bool(same_cell)
+
+
+def test_block_box_and_distance():
+    origin = jnp.zeros(2)
+    side = 1024.0
+    l_max = 5  # 32x32 fine cells of 32u
+    # block (code 0, a=1) covers fine cells 0..3 = 2x2 cells = [0,64)^2
+    x0, y0, x1, y1 = morton.block_box(jnp.asarray([0]), jnp.asarray([1]), origin, side, l_max)
+    assert float(x0[0]) == 0 and float(y0[0]) == 0
+    assert float(x1[0]) == 64.0 and float(y1[0]) == 64.0
+    # distance from inside is 0; from (100, 32) it's 36 in x
+    d2 = morton.point_to_block_dist2(
+        jnp.asarray([100.0]), jnp.asarray([32.0]), jnp.asarray([0]), jnp.asarray([1]),
+        origin, side, l_max,
+    )
+    np.testing.assert_allclose(float(d2[0]), 36.0**2, rtol=1e-6)

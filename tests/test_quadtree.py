@@ -1,0 +1,97 @@
+"""PR-quadtree invariants (paper Sec. 4.1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_index, leaf_of_points, reindex_objects
+from repro.core.quadtree import pyramid_offset
+
+
+def _index(pts, l_max=5, th=8):
+    return build_index(jnp.asarray(pts, jnp.float32), jnp.zeros(2), 1000.0, l_max=l_max, th_quad=th)
+
+
+def _leaves(idx):
+    """Enumerate leaves as (key, level, span) by walking fine cells."""
+    ll = np.asarray(idx.leaf_level)
+    n_fine = len(ll)
+    leaves = []
+    c = 0
+    while c < n_fine:
+        lvl = ll[c]
+        span = 4 ** (idx.l_max - lvl)
+        leaves.append((c, int(lvl), int(span)))
+        c += span
+    return leaves
+
+
+pointsets = st.lists(
+    st.tuples(st.floats(0, 999.9), st.floats(0, 999.9)), min_size=1, max_size=300
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pointsets, st.integers(2, 6), st.integers(2, 32))
+def test_leaves_partition_domain_and_objects(points, l_max, th):
+    idx = _index(points, l_max, th)
+    leaves = _leaves(idx)
+    # leaves tile [0, 4^l_max) exactly
+    assert sum(s for _, _, s in leaves) == 4**idx.l_max
+    starts = np.asarray(idx.starts)
+    # leaf object intervals partition the sorted object array
+    total = 0
+    for key, lvl, span in leaves:
+        cnt = starts[key + span] - starts[key]
+        total += cnt
+        # PR-quadtree split invariant: leaf count <= th unless at l_max
+        if lvl < idx.l_max:
+            assert cnt <= th, (key, lvl, cnt)
+    assert total == len(points)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pointsets)
+def test_leaf_alignment_and_zmap(points):
+    idx = _index(points)
+    for key, lvl, span in _leaves(idx):
+        assert key % span == 0  # aligned (Morton total order, paper Fig. 2)
+    # z_map lookup: every point's leaf contains its fine cell
+    key, lvl = leaf_of_points(idx, jnp.asarray(points, jnp.float32))
+    ll = np.asarray(idx.leaf_level)
+    from repro.core import morton
+
+    fine = np.asarray(
+        morton.morton_encode_points(jnp.asarray(points, jnp.float32), idx.origin, idx.side, idx.l_max)
+    )
+    for i in range(len(points)):
+        span = 4 ** (idx.l_max - int(lvl[i]))
+        assert int(key[i]) <= fine[i] < int(key[i]) + span
+        assert ll[fine[i]] == int(lvl[i])
+
+
+def test_pyramid_consistency():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1000, (500, 2)).astype(np.float32)
+    idx = _index(pts, l_max=4, th=16)
+    pyr = np.asarray(idx.pyramid)
+    for l in range(idx.l_max):
+        cur = pyr[pyramid_offset(l) : pyramid_offset(l) + 4**l]
+        nxt = pyr[pyramid_offset(l + 1) : pyramid_offset(l + 1) + 4 ** (l + 1)]
+        np.testing.assert_array_equal(cur, nxt.reshape(-1, 4).sum(1))
+    assert pyr[0] == 500  # root holds everything
+
+
+def test_reindex_keeps_partition_updates_objects():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1000, (400, 2)).astype(np.float32)
+    idx = _index(pts, l_max=4, th=16)
+    ll_before = np.asarray(idx.leaf_level).copy()
+    pts2 = pts + rng.normal(0, 5, pts.shape).astype(np.float32)
+    pts2 = np.clip(pts2, 0, 999.9)
+    idx2 = reindex_objects(idx, jnp.asarray(pts2))
+    # stage (i) partition unchanged; stage (ii) object store refreshed
+    np.testing.assert_array_equal(ll_before, np.asarray(idx2.leaf_level))
+    assert np.asarray(idx2.pyramid)[0] == 400
+    # sorted by fine code
+    codes = np.asarray(idx2.codes)
+    assert (np.diff(codes) >= 0).all()
