@@ -2,18 +2,80 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Each sub-bench is importable and
 has a __main__ for full-size runs; this runner uses CPU-feasible defaults.
+
+``--smoke`` runs a minutes-scale subset and writes ``BENCH_smoke.json``
+(queries/s + candidates/s per backend, engine tick latency) — the per-PR perf
+trajectory artifact consumed by CI.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
+import time
+
+
+def _smoke(out_path: str) -> None:
+    import numpy as np
+
+    from benchmarks import s4_backends
+    from repro.core import EngineConfig, TickEngine, available_backends
+    from repro.data import make_workload
+
+    rec: dict = {"schema": 1, "unit": "seconds"}
+    rec["backends"] = s4_backends.run(
+        n_objects=8_000, k=16, dists=("uniform",), chunk=2048, out=None
+    )
+
+    # engine steady-state: per-tick wall time after warmup, default backend
+    ticks = {}
+    for backend in available_backends():
+        eng = TickEngine(
+            EngineConfig(k=16, th_quad=192, l_max=7, window=128, chunk=2048,
+                         backend=backend)
+        )
+        w = make_workload(8_000, "gaussian", seed=0)
+        results = eng.run(w, ticks=4)
+        steady = [r.wall_s for r in results[1:]]
+        ticks[backend] = {
+            "tick_s_median": float(np.median(steady)),
+            "queries_per_s": float(8_000 / np.median(steady)),
+            "candidates_per_tick": float(np.mean([r.candidates for r in results[1:]])),
+        }
+    rec["engine"] = ticks
+    rec["timestamp"] = time.time()
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
 
 
 def main() -> None:
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks import kernels, s1_skew, s1_treeheight, s2_vs_baseline, s3_vary_k, s3_vs_cpu
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, root)  # `benchmarks` namespace package
+    sys.path.insert(0, os.path.join(root, "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep; writes the JSON perf artifact")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="smoke-mode JSON output path")
+    args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        _smoke(args.out)
+        return
+
+    from benchmarks import (
+        kernels,
+        s1_skew,
+        s1_treeheight,
+        s2_vs_baseline,
+        s3_vary_k,
+        s3_vs_cpu,
+        s4_backends,
+    )
+
     s1_treeheight.run(n_objects=30_000, ks=(8, 32), th_quads=(48, 384, 1536))
     s1_skew.run(n_objects=30_000, hotspots=(4, 25), th_quads=(96, 384))
     s2_vs_baseline.run_vary_n(ns=(5_000, 20_000))
@@ -21,6 +83,7 @@ def main() -> None:
     s3_vs_cpu.run(ns=(20_000,), dists=("uniform", "gaussian"))
     s3_vary_k.run(n=20_000, ks=(8, 64), dists=("uniform",))
     s3_vary_k.run_update_strategies(q=64, c=512, ks=(32,))
+    s4_backends.run(n_objects=20_000, k=32, out="BENCH_backends.json")
     kernels.run(q=64, c=512, k=16)
 
     # roofline summary (optimized defaults if recorded, else baseline)

@@ -22,33 +22,47 @@ def _setup(n, seed=0):
     return pts, qpos, qid, idx
 
 
-def run_vary_n(ns=(5_000, 20_000, 60_000), k=32):
+def run_vary_n(ns=(5_000, 20_000, 60_000), k=32, backend="dense_topk"):
     rows = []
+    tag = "" if backend == "dense_topk" else f"/{backend}"
     for n in ns:
         pts, qpos, qid, idx = _setup(n)
         t_pipe = time_call(
-            lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0], iters=2
+            lambda: knn_query_batch_chunked(
+                idx, qpos, qid, k=k, chunk=8192, backend=backend
+            )[0],
+            iters=2,
         )
         t_bf = time_call(
             lambda: knn_bruteforce_chunked(pts, qpos, qid, k=k, chunk=2048)[0], iters=2
         )
-        emit(f"s2_vs_baseline/N={n}/pipeline", t_pipe, f"speedup={t_bf / t_pipe:.1f}x")
+        emit(
+            f"s2_vs_baseline/N={n}/pipeline{tag}", t_pipe,
+            f"speedup={t_bf / t_pipe:.1f}x",
+        )
         emit(f"s2_vs_baseline/N={n}/bruteforce", t_bf, "")
         rows.append((n, t_pipe, t_bf))
     return rows
 
 
-def run_vary_k(n=20_000, ks=(4, 32, 128, 256)):
+def run_vary_k(n=20_000, ks=(4, 32, 128, 256), backend="dense_topk"):
     rows = []
+    tag = "" if backend == "dense_topk" else f"/{backend}"
     pts, qpos, qid, idx = _setup(n)
     for k in ks:
         t_pipe = time_call(
-            lambda: knn_query_batch_chunked(idx, qpos, qid, k=k, chunk=8192)[0], iters=2
+            lambda: knn_query_batch_chunked(
+                idx, qpos, qid, k=k, chunk=8192, backend=backend
+            )[0],
+            iters=2,
         )
         t_bf = time_call(
             lambda: knn_bruteforce_chunked(pts, qpos, qid, k=k, chunk=2048)[0], iters=2
         )
-        emit(f"s2_vs_baseline/k={k}/pipeline", t_pipe, f"speedup={t_bf / t_pipe:.1f}x")
+        emit(
+            f"s2_vs_baseline/k={k}/pipeline{tag}", t_pipe,
+            f"speedup={t_bf / t_pipe:.1f}x",
+        )
         emit(f"s2_vs_baseline/k={k}/bruteforce", t_bf, "")
         rows.append((k, t_pipe, t_bf))
     return rows

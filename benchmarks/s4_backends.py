@@ -1,0 +1,118 @@
+"""S4: SCAN-backend sweep + host-loop vs device-chunked driver comparison.
+
+New axis introduced by the executor refactor: the same indexed pipeline is run
+with every registered SCAN backend (``dense_topk`` | ``fused_bucket`` |
+``brute``) on uniform and skewed workloads, plus a *legacy host-loop* driver
+row (one ``knn_query_batch`` dispatch + device->host copy per chunk — the
+seed's ``knn_query_batch_chunked``) against the fused single-call driver, so
+the device-residency win is a measured number, not a claim.
+
+Emits CSV rows like every other study and (via ``--out`` / ``run(out=...)``)
+a machine-readable ``BENCH_backends.json`` for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    available_backends,
+    build_index,
+    knn_query_batch,
+    knn_query_batch_chunked,
+)
+from repro.data import make_workload
+
+from .common import emit, time_call
+
+
+def _host_loop_chunked(index, qpos, qid, *, k, window, chunk, backend):
+    """The seed's driver: Python chunk loop, one dispatch + copy per chunk."""
+    nq = qpos.shape[0]
+    out = []
+    for lo in range(0, nq, chunk):
+        hi = min(lo + chunk, nq)
+        qp = jnp.asarray(qpos[lo:hi])
+        qi = jnp.asarray(qid[lo:hi])
+        if hi - lo < chunk:
+            pad = chunk - (hi - lo)
+            qp = jnp.concatenate([qp, jnp.tile(qp[-1:], (pad, 1))])
+            qi = jnp.concatenate([qi, jnp.full((pad,), -2, jnp.int32)])
+        ii, _, _ = knn_query_batch(index, qp, qi, k=k, window=window, backend=backend)
+        out.append(np.asarray(ii[: hi - lo]))
+    return np.concatenate(out)
+
+
+def run(
+    n_objects: int = 20_000,
+    k: int = 32,
+    dists=("uniform", "gaussian"),
+    window: int = 128,
+    chunk: int = 4096,
+    out: str | None = None,
+):
+    records = []
+    for dist in dists:
+        w = make_workload(n_objects, dist, seed=0)
+        pts = w.positions()
+        qpos, qid = w.query_batch()
+        idx = build_index(
+            jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=8, th_quad=384
+        )
+        # driver comparison (fixed default backend): host loop vs device map
+        t_host = time_call(
+            lambda: _host_loop_chunked(
+                idx, qpos, qid, k=k, window=window, chunk=chunk, backend="dense_topk"
+            ),
+            iters=2,
+        )
+        for backend in available_backends():
+            t_dev = time_call(
+                lambda b=backend: knn_query_batch_chunked(
+                    idx, qpos, qid, k=k, window=window, chunk=chunk, backend=b
+                )[0],
+                iters=2,
+            )
+            _, _, stats = knn_query_batch_chunked(
+                idx, qpos, qid, k=k, window=window, chunk=chunk, backend=backend
+            )
+            cand_s = stats.candidates / t_dev
+            emit(
+                f"s4_backends/{dist}/{backend}",
+                t_dev,
+                f"cand/s={cand_s:.3e} vs_host_loop={t_host / t_dev:.2f}x",
+            )
+            records.append(
+                {
+                    "dist": dist,
+                    "backend": backend,
+                    "n_objects": n_objects,
+                    "k": k,
+                    "window": window,
+                    "chunk": chunk,
+                    "seconds": t_dev,
+                    "host_loop_seconds": t_host,
+                    "candidates": stats.candidates,
+                    "candidates_per_s": cand_s,
+                    "queries_per_s": n_objects / t_dev,
+                }
+            )
+    if out:
+        with open(out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {out}", flush=True)
+    return records
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objects", type=int, default=20_000)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--out", default="BENCH_backends.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_objects=args.objects, k=args.k, out=args.out)

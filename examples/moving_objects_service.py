@@ -14,7 +14,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import EngineConfig, TickEngine
+from repro.core import EngineConfig, TickEngine, available_backends
 from repro.data import make_workload
 
 
@@ -25,14 +25,17 @@ def main():
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--distribution", default="gaussian",
                     choices=["uniform", "gaussian", "network"])
+    ap.add_argument("--backend", default="dense_topk",
+                    choices=list(available_backends()),
+                    help="SCAN-step selection backend (executor registry)")
     args = ap.parse_args()
 
     engine = TickEngine(EngineConfig(k=args.k, th_quad=384, l_max=8, window=256,
-                                     chunk=8192))
+                                     chunk=8192, backend=args.backend))
     workload = make_workload(args.objects, args.distribution, seed=0)
 
     print(f"serving {args.objects} objects x {args.ticks} ticks "
-          f"({args.distribution}, k={args.k})")
+          f"({args.distribution}, k={args.k}, backend={args.backend})")
 
     def on_tick(res):
         print(f"tick {res.tick:2d}: {res.wall_s * 1e3:7.1f} ms "

@@ -1,8 +1,14 @@
 """The paper's contribution: iterated batched k-NN over moving objects, in JAX."""
 from .baseline import knn_bruteforce, knn_bruteforce_chunked
 from .cpu_ref import KDTree
+from .executor import QueryExecutor, available_backends, resolve_executor
 from .kselect import find_kdist
-from .pipeline import KnnStats, knn_query_batch, knn_query_batch_chunked
+from .pipeline import (
+    KnnStats,
+    knn_chunked_device,
+    knn_query_batch,
+    knn_query_batch_chunked,
+)
 from .quadtree import QuadtreeIndex, build_index, leaf_of_points, reindex_objects
 from .ticks import EngineConfig, TickEngine, TickResult
 
@@ -10,8 +16,12 @@ __all__ = [
     "knn_bruteforce",
     "knn_bruteforce_chunked",
     "KDTree",
+    "QueryExecutor",
+    "available_backends",
+    "resolve_executor",
     "find_kdist",
     "KnnStats",
+    "knn_chunked_device",
     "knn_query_batch",
     "knn_query_batch_chunked",
     "QuadtreeIndex",

@@ -1,0 +1,56 @@
+"""QueryExecutor — the seam between the kernel, core and serving layers.
+
+The pipeline (core layer) never selects neighbours itself: every SCAN
+iteration hands its gathered candidate window to an executor, which dispatches
+to a registered kernel-layer backend (DESIGN.md §6).  The serving layer
+(:class:`repro.core.ticks.TickEngine`) and the benchmarks pick the backend by
+name (``EngineConfig.backend`` / ``--backend``), so swapping the selection
+strategy — XLA top-k, the fused Pallas kernel, full-sort brute force, or any
+future sharded/approximate variant — touches no pipeline code.
+
+``QueryExecutor`` is a frozen (hence hashable) dataclass so it can ride
+through ``jax.jit`` as a *static* argument: a jitted pipeline specializes per
+backend, exactly like it specializes per ``k``/``window``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels import get_scan_backend, scan_backend_names
+
+__all__ = ["QueryExecutor", "resolve_executor", "available_backends"]
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names accepted by ``resolve_executor`` / ``EngineConfig.backend``."""
+    return scan_backend_names()
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryExecutor:
+    """A named SCAN-merge strategy (+ room for future static tuning knobs)."""
+
+    backend: str = "dense_topk"
+
+    def __post_init__(self):
+        get_scan_backend(self.backend)  # fail fast on unknown names
+
+    def scan_merge(self, qpos, cpos, cids, valid, best_d, best_i, *, k: int):
+        """Merge one candidate window into the ascending result lists.
+
+        qpos (Q,2); cpos (Q,W,2); cids/valid (Q,W); best_d/best_i (Q,k) ->
+        (best_d, best_i), semantics identical across backends up to k-th-
+        distance ties.
+        """
+        return get_scan_backend(self.backend)(
+            qpos, cpos, cids, valid, best_d, best_i, k
+        )
+
+
+def resolve_executor(backend) -> QueryExecutor:
+    """Name | QueryExecutor | None -> QueryExecutor (default: dense_topk)."""
+    if backend is None:
+        return QueryExecutor()
+    if isinstance(backend, QueryExecutor):
+        return backend
+    return QueryExecutor(backend=str(backend))

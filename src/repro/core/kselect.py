@@ -71,7 +71,14 @@ def find_kdist(
         new_lo = lo + sel * width
         new_hi = new_lo + width
         new_kth = kth - below
-        return new_lo, new_hi, new_kth
+        # float guard: edge rounding can push the k-th element out of [lo, hi);
+        # keep the previous (still-valid) interval in that case.
+        ok = cum[:, -1] >= kth
+        return (
+            jnp.where(ok, new_lo, lo),
+            jnp.where(ok, new_hi, hi),
+            jnp.where(ok, new_kth, kth),
+        )
 
     lo, hi, kth = jax.lax.fori_loop(0, iters, body, (lo, hi, kth))
     r = hi

@@ -19,6 +19,17 @@ Queries are pre-sorted by Morton code, so active lanes stay spatially coherent â
 the same locality argument as the paper's SM-task packing, expressed as vector-lane
 coherence instead of warp coherence.
 
+The SCAN step's distance+selection is NOT inlined here: it dispatches through a
+:class:`repro.core.executor.QueryExecutor` to a registered kernel-layer backend
+(``dense_topk`` | ``fused_bucket`` | ``brute`` â€” DESIGN.md Â§6), carried through
+``jax.jit`` as a static argument.
+
+Batching: ``knn_query_batch`` runs one device program over the whole batch;
+``knn_query_batch_chunked`` bounds memory by mapping the same program over
+fixed-shape query chunks with ``lax.map`` *inside one jitted call* â€” chunks
+never round-trip to the host (the seed's Python chunk loop paid one dispatch +
+one device->host copy per chunk per tick).
+
 Invariants that make block-skipping sound (proved in tests):
   * cursors ``cl``/``cr`` always sit on leaf boundaries;
   * an aligned block that starts (ends) on a leaf boundary is a union of whole
@@ -34,9 +45,17 @@ import jax
 import jax.numpy as jnp
 
 from . import morton
+from .executor import QueryExecutor, resolve_executor
 from .quadtree import QuadtreeIndex
 
-__all__ = ["knn_query_batch", "knn_query_batch_chunked", "KnnStats"]
+__all__ = [
+    "knn_query_batch",
+    "knn_query_batch_chunked",
+    "knn_chunked_device",
+    "pad_queries",
+    "default_max_nav",
+    "KnnStats",
+]
 
 INF = jnp.inf
 
@@ -128,11 +147,7 @@ def _nav_step(index: QuadtreeIndex, qx, qy, kth2, cursor, run, dir_r):
     return found, s, e, new_cursor, run & exhausted
 
 
-@partial(
-    jax.jit,
-    static_argnames=("k", "window", "max_nav", "max_iters"),
-)
-def _knn_sorted(
+def _knn_sorted_impl(
     index: QuadtreeIndex,
     qpos: jnp.ndarray,
     qid: jnp.ndarray,
@@ -140,8 +155,9 @@ def _knn_sorted(
     window: int,
     max_nav: int,
     max_iters: int,
+    executor: QueryExecutor,
 ):
-    """k-NN for queries already sorted by Morton code."""
+    """k-NN for queries already sorted by Morton code (trace-level body)."""
     nq = qpos.shape[0]
     n_obj = index.n_objects
     n_fine = index.n_fine
@@ -185,29 +201,26 @@ def _knn_sorted(
     def body(st: _State) -> _State:
         # ---------------- SCAN: one window of W candidates per scanning query.
         idx = st.s_cur[:, None] + st.off[:, None] + warange[None, :]
-        valid = st.scanning[:, None] & (idx < st.e_cur[:, None])
+        in_window = st.scanning[:, None] & (idx < st.e_cur[:, None])
         idxc = jnp.clip(idx, 0, n_obj - 1)
         # NOTE: a fused (x,y,id) packed gather was tried and REFUTED â€” two
         # narrow gathers beat one wide one here (EXPERIMENTS.md Â§Perf, P4)
         cpos = index.pos[idxc]  # (Q, W, 2)
         cids = index.ids[idxc]
-        dx = cpos[:, :, 0] - qx[:, None]
-        dy = cpos[:, :, 1] - qy[:, None]
-        d2 = dx * dx + dy * dy
-        d2 = jnp.where(valid & (cids != qid[:, None]), d2, INF)
-        # top-k merge (result lists stay ascending; linear layout of Fig. 1)
-        all_d = jnp.concatenate([st.best_d, d2], axis=1)
-        all_i = jnp.concatenate([st.best_i, cids], axis=1)
-        neg, sel = jax.lax.top_k(-all_d, k)
-        best_d = -neg
-        best_i = jnp.take_along_axis(all_i, sel, axis=1)
+        valid = in_window & (cids != qid[:, None])
+        # distance + k-selection merge: dispatched to the registered backend
+        # (result lists stay ascending; linear layout of Fig. 1)
+        best_d, best_i = executor.scan_merge(
+            qpos, cpos, cids, valid, st.best_d, st.best_i, k=k
+        )
         kth2 = best_d[:, k - 1]
 
         off2 = st.off + window
         leaf_done = st.s_cur + off2 >= st.e_cur
         scanning = st.scanning & ~leaf_done
         off = jnp.where(st.scanning & ~leaf_done, off2, st.off)
-        cand = st.cand + valid.sum().astype(jnp.float32)
+        # candidates stat counts scanned slots incl. the issuer (seed semantics)
+        cand = st.cand + in_window.sum().astype(jnp.float32)
 
         # ---------------- NAV: bounded frontier advance for idle active queries.
         nav = ~scanning & (st.act_l | st.act_r)
@@ -272,6 +285,49 @@ def _knn_sorted(
     return st.best_i, st.best_d, stats
 
 
+_knn_sorted = jax.jit(
+    _knn_sorted_impl,
+    static_argnames=("k", "window", "max_nav", "max_iters", "executor"),
+)
+
+
+def _sort_unsort(index: QuadtreeIndex, qpos: jnp.ndarray):
+    """Morton sort permutation of the queries (locality; see module docstring)."""
+    qcodes = morton.morton_encode_points(qpos, index.origin, index.side, index.l_max)
+    order = jnp.argsort(qcodes)
+    return order, jnp.argsort(order)
+
+
+def default_max_nav(l_max: int) -> int:
+    """Navigation steps bundled per iteration: enough aligned jumps to cross
+    the whole domain (the single source of this formula â€” serving reuses it)."""
+    return 2 * l_max + 4
+
+
+def _resolve_max_nav(index: QuadtreeIndex, max_nav):
+    return default_max_nav(index.l_max) if max_nav is None else max_nav
+
+
+def pad_queries(qpos, qid, chunk: int):
+    """Host-side pad of (Q,2)/(Q,) to a whole number of chunks.
+
+    Padding rows clone the last query with qid=-2 (results discarded by the
+    caller via ``[:Q]``).  Done on the host so the jitted chunked program is
+    compiled per *chunk count*, never per raw query count.
+    """
+    import numpy as np
+
+    nq = qpos.shape[0]
+    n_chunks = max(1, -(-nq // chunk))
+    padded = n_chunks * chunk
+    if padded == nq:
+        return qpos, qid
+    pad = padded - nq
+    qpos = np.concatenate([qpos, np.tile(np.asarray(qpos[-1:]), (pad, 1))])
+    qid = np.concatenate([np.asarray(qid), np.full((pad,), -2, np.int32)])
+    return qpos, qid
+
+
 def knn_query_batch(
     index: QuadtreeIndex,
     qpos: jnp.ndarray,
@@ -281,6 +337,7 @@ def knn_query_batch(
     window: int = 128,
     max_nav: int | None = None,
     max_iters: int = 100_000,
+    backend: str | QueryExecutor | None = None,
 ):
     """Compute a batch of k-NN queries against the index (one tick's ``Q``).
 
@@ -294,6 +351,8 @@ def knn_query_batch(
     window: candidate window width W (the per-iteration tile).
     max_nav: navigation steps bundled per iteration (default ``2*l_max + 4``,
         enough to cross the whole domain by aligned jumps).
+    backend: SCAN backend name or :class:`QueryExecutor` (default ``dense_topk``;
+        see ``repro.core.executor.available_backends``).
 
     Returns
     -------
@@ -307,14 +366,69 @@ def knn_query_batch(
         qid = jnp.full((nq,), -2, jnp.int32)  # never matches a real id
     else:
         qid = jnp.asarray(qid, jnp.int32)
-    if max_nav is None:
-        max_nav = 2 * index.l_max + 4
+    executor = resolve_executor(backend)
+    max_nav = _resolve_max_nav(index, max_nav)
     # spatial sort of queries (locality for z_map lookups & frontier coherence)
-    qcodes = morton.morton_encode_points(qpos, index.origin, index.side, index.l_max)
-    order = jnp.argsort(qcodes)
-    inv = jnp.argsort(order)
+    order, inv = _sort_unsort(index, qpos)
     idx_s, d2_s, stats = _knn_sorted(
-        index, qpos[order], qid[order], k, window, max_nav, max_iters
+        index, qpos[order], qid[order], k, window, max_nav, max_iters, executor
+    )
+    return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "window", "chunk", "max_nav", "max_iters", "executor"),
+)
+def knn_chunked_device(
+    index: QuadtreeIndex,
+    qpos: jnp.ndarray,
+    qid: jnp.ndarray,
+    *,
+    k: int,
+    window: int,
+    chunk: int,
+    max_nav: int,
+    max_iters: int,
+    executor: QueryExecutor,
+):
+    """Memory-bounded batch k-NN as ONE device program.
+
+    Queries are Morton-sorted globally (so chunks are spatially coherent) and
+    processed by ``lax.map`` over the same compiled chunk program â€” no host
+    round trips between chunks.  ``Q`` must already be a whole number of
+    chunks: callers pad on the host (:func:`pad_queries`) so the compiled
+    program is keyed by *chunk count*, not by the raw query count â€” variable
+    per-tick batch sizes reuse the same executable (the seed driver's "one jit
+    cache" property).
+
+    Returns (nn_idx (Q,k) i32, nn_dist (Q,k) f32 euclidean, stats) in the
+    caller's query order (padding rows come back in their input positions).
+    """
+    nq = qpos.shape[0]
+    assert nq % chunk == 0, (nq, chunk)  # pad_queries upholds this
+    qpos = qpos.astype(jnp.float32)
+    qid = qid.astype(jnp.int32)
+    order, inv = _sort_unsort(index, qpos)
+    qpos_s, qid_s = qpos[order], qid[order]
+    n_chunks = nq // chunk
+
+    def one_chunk(args):
+        qp, qi = args
+        return _knn_sorted_impl(
+            index, qp, qi, k, window, max_nav, max_iters, executor
+        )
+
+    idx_c, d2_c, stats_c = jax.lax.map(
+        one_chunk,
+        (qpos_s.reshape(n_chunks, chunk, 2), qid_s.reshape(n_chunks, chunk)),
+    )
+    idx_s = idx_c.reshape(nq, k)
+    d2_s = d2_c.reshape(nq, k)
+    stats = KnnStats(
+        iterations=stats_c.iterations.sum(),
+        candidates=stats_c.candidates.sum(),
+        leaves_visited=stats_c.leaves_visited.sum(),
     )
     return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
 
@@ -327,34 +441,34 @@ def knn_query_batch_chunked(
     k: int = 32,
     window: int = 128,
     chunk: int = 8192,
-    **kw,
+    max_nav: int | None = None,
+    max_iters: int = 100_000,
+    backend: str | QueryExecutor | None = None,
 ):
-    """Memory-bounded driver: process queries in fixed-size chunks (one jit cache)."""
+    """Host-friendly wrapper over :func:`knn_chunked_device` (numpy in/out)."""
     import numpy as np
 
     nq = qpos.shape[0]
     if qid is None:
         qid = np.full((nq,), -2, np.int32)
-    out_i, out_d = [], []
-    iters = 0
-    cand = 0.0
-    leaves = 0
-    for lo in range(0, nq, chunk):
-        hi = min(lo + chunk, nq)
-        qp = jnp.asarray(qpos[lo:hi])
-        qi = jnp.asarray(qid[lo:hi])
-        if hi - lo < chunk:  # pad to keep a single compiled shape
-            pad = chunk - (hi - lo)
-            qp = jnp.concatenate([qp, jnp.tile(qp[-1:], (pad, 1))])
-            qi = jnp.concatenate([qi, jnp.full((pad,), -2, jnp.int32)])
-        ii, dd, stats = knn_query_batch(index, qp, qi, k=k, window=window, **kw)
-        out_i.append(np.asarray(ii[: hi - lo]))
-        out_d.append(np.asarray(dd[: hi - lo]))
-        iters += int(stats.iterations)
-        cand += float(stats.candidates)
-        leaves += int(stats.leaves_visited)
+    qpos_p, qid_p = pad_queries(np.asarray(qpos), np.asarray(qid), chunk)
+    ii, dd, stats = knn_chunked_device(
+        index,
+        jnp.asarray(qpos_p, jnp.float32),
+        jnp.asarray(qid_p, jnp.int32),
+        k=k,
+        window=window,
+        chunk=chunk,
+        max_nav=_resolve_max_nav(index, max_nav),
+        max_iters=max_iters,
+        executor=resolve_executor(backend),
+    )
     return (
-        np.concatenate(out_i),
-        np.concatenate(out_d),
-        KnnStats(iterations=iters, candidates=cand, leaves_visited=leaves),
+        np.asarray(ii[:nq]),
+        np.asarray(dd[:nq]),
+        KnnStats(
+            iterations=int(stats.iterations),
+            candidates=float(stats.candidates),
+            leaves_visited=int(stats.leaves_visited),
+        ),
     )

@@ -5,23 +5,38 @@ up-to-date positions ``P`` and the query batch ``Q``, maintains the spatial
 index, runs the iterative pipeline and emits the result batch ``R`` — i.e. the
 repeated spatial join of the problem statement, with timeslice semantics.
 
-Index maintenance follows the paper (Sec. 4.1.1): stage (ii) (object re-sort +
-interval refresh) runs every tick; stage (i) (the space partition / z_map) is
-rebuilt **only** when the measured computation volume of the last tick exceeds
-the volume observed when the partition was built by ``rebuild_factor`` — the
-paper's trigger "the overall amount of computations yielded during the last tick
-exceeds by a given factor the amount yielded during past, recent ticks".
+The whole steady-state tick is ONE donated-buffer jitted device program
+(:func:`_tick_step`, DESIGN.md §8): stage (ii) index refresh (object re-sort +
+interval/pyramid rebuild), the chunked query sweep (``lax.map`` over fixed-
+shape chunks — no per-chunk host loop), and the drift statistic all run
+device-side; the host reads back results plus one boolean.  Donation lets XLA
+reuse the previous tick's index buffers for the refreshed index in place.
+
+Index maintenance follows the paper (Sec. 4.1.1): stage (ii) runs every tick;
+stage (i) (the space partition / z_map) is rebuilt **only** when the measured
+computation volume of the last tick exceeds the volume observed when the
+partition was built by ``rebuild_factor`` — the paper's trigger "the overall
+amount of computations yielded during the last tick exceeds by a given factor
+the amount yielded during past, recent ticks".  The trigger is *computed on
+device* from the tick's candidate counter and crosses to the host as a single
+scalar together with the results.
+
+The SCAN backend is configurable per engine (``EngineConfig.backend``; see
+``repro.core.executor.available_backends``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pipeline import knn_query_batch_chunked
+from .executor import QueryExecutor, resolve_executor
+from .pipeline import default_max_nav, knn_chunked_device, pad_queries
 from .quadtree import build_index, reindex_objects
 
 __all__ = ["TickEngine", "TickResult", "EngineConfig"]
@@ -36,6 +51,8 @@ class EngineConfig:
     chunk: int = 8192
     rebuild_factor: float = 2.0  # rebuild partition when work grows by this factor
     region_pad: float = 1e-3
+    backend: str = "dense_topk"  # SCAN backend (executor.available_backends())
+    max_iters: int = 100_000
 
 
 @dataclasses.dataclass
@@ -49,12 +66,57 @@ class TickResult:
     iterations: int
 
 
+@partial(
+    jax.jit,
+    static_argnames=("k", "window", "chunk", "max_nav", "max_iters", "executor"),
+    donate_argnums=(0,),
+)
+def _tick_step(
+    index,
+    positions,
+    qpos,
+    qid,
+    work_at_build,
+    rebuild_factor,
+    *,
+    k: int,
+    window: int,
+    chunk: int,
+    max_nav: int,
+    max_iters: int,
+    executor: QueryExecutor,
+):
+    """(index, P_tau, Q_tau) -> (index', R_tau, stats, should_rebuild).
+
+    One fused device program per tick: reindex + chunked query + drift check.
+    The incoming index is donated — XLA refreshes it in place.  On ticks whose
+    index was just built from these exact positions the reindex is a semantic
+    no-op; running it anyway keeps ONE compiled program (a static skip flag
+    would double the compile for a microseconds-scale saving).
+    """
+    index = reindex_objects(index, positions)
+    nn_idx, nn_dist, stats = knn_chunked_device(
+        index,
+        qpos,
+        qid,
+        k=k,
+        window=window,
+        chunk=chunk,
+        max_nav=max_nav,
+        max_iters=max_iters,
+        executor=executor,
+    )
+    should_rebuild = stats.candidates > rebuild_factor * work_at_build
+    return index, nn_idx, nn_dist, stats, should_rebuild
+
+
 class TickEngine:
     def __init__(self, cfg: EngineConfig, origin=(0.0, 0.0), side: float = 22_500.0):
         self.cfg = cfg
         self.origin = np.asarray(origin, np.float32)
         self.side = float(side)
         self.index = None
+        self.executor = resolve_executor(cfg.backend)
         self._work_at_build: float | None = None
         self.tick = 0
         self.history: list[TickResult] = []
@@ -78,27 +140,37 @@ class TickEngine:
         if self.index is None:
             self._build(positions)
             rebuilt = True
-        else:
-            self.index = reindex_objects(self.index, jnp.asarray(positions))
-        nn_idx, nn_dist, stats = knn_query_batch_chunked(
+        nq = qpos.shape[0]
+        if qid is None:
+            qid = np.full((nq,), -2, np.int32)
+        # host-side pad: the compiled step is keyed by chunk count, not nq
+        qpos_p, qid_p = pad_queries(np.asarray(qpos), np.asarray(qid), self.cfg.chunk)
+        # the whole tick is one jitted call; host reads results + one bool back
+        self.index, nn_idx, nn_dist, stats, should_rebuild = _tick_step(
             self.index,
-            qpos,
-            qid,
+            jnp.asarray(positions, jnp.float32),
+            jnp.asarray(qpos_p, jnp.float32),
+            jnp.asarray(qid_p, jnp.int32),
+            jnp.float32(np.inf if self._work_at_build is None else self._work_at_build),
+            jnp.float32(self.cfg.rebuild_factor),
             k=self.cfg.k,
             window=self.cfg.window,
             chunk=self.cfg.chunk,
+            max_nav=default_max_nav(self.cfg.l_max),
+            max_iters=self.cfg.max_iters,
+            executor=self.executor,
         )
         work = float(stats.candidates)
         if self._work_at_build is None:
             self._work_at_build = work
-        elif work > self.cfg.rebuild_factor * self._work_at_build:
-            # distribution drifted: rebuild partition next tick's index state now
+        elif bool(should_rebuild):
+            # distribution drifted: rebuild partition for next tick's index now
             self._build(positions)
             rebuilt = True
         res = TickResult(
             tick=self.tick,
-            nn_idx=nn_idx,
-            nn_dist=nn_dist,
+            nn_idx=np.asarray(nn_idx[:nq]),
+            nn_dist=np.asarray(nn_dist[:nq]),
             rebuilt=rebuilt,
             wall_s=time.perf_counter() - t0,
             candidates=work,

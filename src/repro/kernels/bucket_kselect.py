@@ -17,6 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .refine import bucket_refine_step
+from .runtime import default_interpret
+
 __all__ = ["bucket_kselect", "Q_TILE"]
 
 Q_TILE = 8
@@ -40,28 +43,10 @@ def _make_kernel(k: int, num_bins: int, iters: int, c: int):
         hi0 = jnp.max(jnp.where(valid[None, :], d2, -big), axis=1)
         hi = jnp.maximum(hi0, lo) * (1 + 1e-6) + 1e-30
         kth = jnp.full((Q_TILE,), k, jnp.int32)
-        bins = jnp.arange(num_bins, dtype=jnp.int32)
 
         def body(_, state):
             lo, hi, kth = state
-            width = jnp.maximum((hi - lo) / num_bins, 1e-30)
-            b = jnp.clip(
-                jnp.floor((d2 - lo[:, None]) / width[:, None]), 0, num_bins - 1
-            ).astype(jnp.int32)
-            in_range = (d2 >= lo[:, None]) & (d2 < hi[:, None])
-            # (Q, C, NB) bin-broadcast compare -> per-query histogram
-            onehot = (b[:, :, None] == bins[None, None, :]) & in_range[:, :, None]
-            hist = onehot.astype(jnp.int32).sum(axis=1)
-            cum = jnp.cumsum(hist, axis=1)
-            sel = jnp.argmax(cum >= kth[:, None], axis=1)
-            below = jnp.where(
-                sel > 0,
-                jnp.take_along_axis(cum, jnp.maximum(sel - 1, 0)[:, None], 1)[:, 0],
-                0,
-            )
-            new_lo = lo + sel.astype(lo.dtype) * width
-            new_hi = new_lo + width
-            return new_lo, new_hi, kth - below
+            return bucket_refine_step(d2, lo, hi, kth, num_bins)
 
         lo, hi, kth = jax.lax.fori_loop(0, iters, body, (lo, hi, kth))
         out_ref[:] = jnp.where(n_valid < k, big, hi).astype(out_ref.dtype)
@@ -82,14 +67,17 @@ def bucket_kselect(
     k: int,
     num_bins: int = 32,
     iters: int = 4,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """(Q,) queries x (C,) shared candidate window -> (Q,) k-selection radius.
 
     Guarantee: ``count(valid & d2 < r) >= min(k, n_valid)`` per query, with the
     excess bounded by one bucket width after ``iters`` refinements; rows with
-    fewer than k valid candidates return +inf.
+    fewer than k valid candidates return +inf.  ``interpret=None`` auto-detects
+    (compiled on TPU, interpreted elsewhere — see runtime.default_interpret).
     """
+    if interpret is None:
+        interpret = default_interpret()
     q, c = qx.shape[0], px.shape[0]
     assert q % Q_TILE == 0, q
     grid = (q // Q_TILE,)

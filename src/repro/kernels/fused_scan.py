@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: fused SCAN-step merge — distance + bucket prune + top-k.
+
+This is the per-iteration inner join of the pipeline (paper Sec. 4.2) as ONE
+kernel: each grid step takes a Q_TILE of queries, their gathered candidate
+window (per-query rows, unlike ``bucket_kselect``'s shared window), and the
+current ascending result lists, and emits the merged lists.  Everything between
+the coordinate planes (in) and the (Q, k) lists (out) — the distance tile, the
+histogram refinement, the merge working set — lives in VMEM for the whole step
+(DESIGN.md §7): HBM traffic is O(Q·W) coordinates in + O(Q·k) lists out, never
+the O(Q·(W+k)) distance matrix that the unfused path materializes between the
+distance op and the selection op.
+
+Selection is two-phase, both pillars of the paper fused back-to-back:
+  1. **bucket k-selection** (Alabi et al., Sec. 4.2.1): refine a per-query
+     radius r over the combined [current list ‖ window] population with
+     ``count(d < r) >= min(k, n_valid)`` — so every true top-k member is < r;
+  2. **masked argmin rounds** on the r-pruned row materialize the ascending
+     (dist, id) lists, exactly like ``topk_select`` but on VMEM-resident
+     distances.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .refine import bucket_refine_step
+from .runtime import default_interpret
+
+__all__ = ["fused_scan_merge", "Q_TILE"]
+
+Q_TILE = 8
+
+
+def _make_kernel(k: int, w: int, num_bins: int, iters: int):
+    def kernel(
+        qx_ref, qy_ref, cx_ref, cy_ref, cids_ref, valid_ref,
+        best_d_ref, best_i_ref, out_d_ref, out_i_ref,
+    ):
+        qx = qx_ref[:]  # (T,)
+        qy = qy_ref[:]
+        cx = cx_ref[:, :]  # (T, W)
+        cy = cy_ref[:, :]
+        cids = cids_ref[:, :]
+        valid = valid_ref[:, :]
+        big = jnp.asarray(jnp.inf, jnp.float32)
+
+        dx = cx - qx[:, None]
+        dy = cy - qy[:, None]
+        d2 = jnp.where(valid, dx * dx + dy * dy, big)  # (T, W) — stays in VMEM
+
+        all_d = jnp.concatenate([best_d_ref[:, :], d2], axis=1)  # (T, k+W)
+        all_i = jnp.concatenate([best_i_ref[:, :], cids], axis=1)
+        finite = ~jnp.isinf(all_d)
+        n_valid = finite.astype(jnp.int32).sum(axis=1)  # (T,)
+
+        # --- pillar 1: bucket refinement of the k-th-distance radius.
+        lo = jnp.min(all_d, axis=1)
+        hi0 = jnp.max(jnp.where(finite, all_d, -big), axis=1)
+        hi = jnp.maximum(hi0, lo) * (1 + 1e-6) + 1e-30
+        kth = jnp.full((Q_TILE,), k, jnp.int32)
+
+        def refine(_, state):
+            lo, hi, kth = state
+            return bucket_refine_step(all_d, lo, hi, kth, num_bins)
+
+        flo, fhi, _ = jax.lax.fori_loop(0, iters, refine, (lo, hi, kth))
+        # The k-th element lies in [flo, fhi) up to float rounding of the bucket
+        # edges; one extra bucket width of slop makes the prune safely
+        # conservative (excess survivors cost nothing — the argmin rounds below
+        # still pick the exact k smallest).
+        radius = jnp.where(n_valid < k, big, fhi + (fhi - flo))
+        d_sel = jnp.where(all_d < radius[:, None], all_d, big)
+
+        # --- pillar 2: ascending materialization by masked argmin rounds.
+        col = jax.lax.broadcasted_iota(jnp.int32, (Q_TILE, k + w), 1)
+
+        def take(j, state):
+            d, out_d, out_i = state
+            m = jnp.argmin(d, axis=1)
+            mval = jnp.min(d, axis=1)
+            hit = col == m[:, None]
+            out_d = out_d.at[:, j].set(mval)
+            out_i = out_i.at[:, j].set(
+                jnp.where(
+                    jnp.isinf(mval),
+                    -1,
+                    jnp.take_along_axis(all_i, m[:, None], 1)[:, 0],
+                )
+            )
+            return jnp.where(hit, big, d), out_d, out_i
+
+        out_d = jnp.zeros((Q_TILE, k), jnp.float32)
+        out_i = jnp.zeros((Q_TILE, k), jnp.int32)
+        _, out_d, out_i = jax.lax.fori_loop(0, k, take, (d_sel, out_d, out_i))
+        out_d_ref[:, :] = out_d
+        out_i_ref[:, :] = out_i
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_bins", "iters", "interpret")
+)
+def fused_scan_merge(
+    qx, qy, cx, cy, cids, valid, best_d, best_i,
+    *,
+    k: int,
+    num_bins: int = 32,
+    iters: int = 4,
+    interpret: bool | None = None,
+):
+    """(Q,) queries x (Q, W) per-query windows x (Q, k) lists -> merged lists.
+
+    Semantics match the unfused dense path exactly (up to k-th-distance ties):
+    ``merge(best, window)`` = k smallest of the union, ascending, (-1, inf)
+    padded.  Q must be a multiple of Q_TILE (wrappers pad).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    q, w = cx.shape
+    assert q % Q_TILE == 0, q
+    grid = (q // Q_TILE,)
+    row = lambda i: (i, 0)
+    out_d, out_i = pl.pallas_call(
+        _make_kernel(k, w, num_bins, iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+            pl.BlockSpec((Q_TILE, w), row),
+            pl.BlockSpec((Q_TILE, w), row),
+            pl.BlockSpec((Q_TILE, w), row),
+            pl.BlockSpec((Q_TILE, w), row),
+            pl.BlockSpec((Q_TILE, k), row),
+            pl.BlockSpec((Q_TILE, k), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q_TILE, k), row),
+            pl.BlockSpec((Q_TILE, k), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qx, qy, cx, cy, cids, valid, best_d, best_i)
+    return out_d, out_i

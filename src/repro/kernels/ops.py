@@ -1,26 +1,48 @@
-"""Jit'd public wrappers around the Pallas kernels (padding + dispatch).
+"""Jit'd public wrappers around the Pallas kernels + the SCAN backend registry.
 
-On this CPU container kernels run in ``interpret=True`` mode (the kernel body is
-executed on CPU for correctness); on TPU the same calls compile to Mosaic.  Set
-``REPRO_PALLAS_INTERPRET=0`` to request compiled mode.
+Two things live here:
+
+1. **Padding wrappers** (``*_op``): pad ragged shapes to kernel tile multiples,
+   dispatch, slice back.  On non-TPU backends kernels run in ``interpret=True``
+   mode (the body executes as jnp on the host); on TPU the same calls compile
+   to Mosaic — see :func:`repro.kernels.runtime.default_interpret`.  Set
+   ``REPRO_PALLAS_INTERPRET=0/1`` to force either mode.
+
+2. **The scan-backend registry** (DESIGN.md §6): the pipeline's SCAN step —
+   "merge one window of gathered candidates into each query's ascending result
+   list" — is a pluggable strategy selected by name.  All backends implement
+   ``merge(qpos, cpos, cids, valid, best_d, best_i, k)`` with identical
+   semantics (k smallest of the union, ascending, (-1, inf) padded; k-th-
+   distance ties arbitrary) so they are interchangeable under the executor:
+
+   - ``dense_topk``   XLA ``lax.top_k`` over the concatenated row (seed path);
+   - ``fused_bucket`` one Pallas kernel: distance tile + Alabi bucket radius +
+                      masked argmin rounds, all VMEM-resident (DESIGN.md §7);
+   - ``brute``        full per-row sort (Garcia-baseline flavour: selection
+                      cost independent of k, the S2 yardstick).
 """
 from __future__ import annotations
 
-import os
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import bucket_kselect as _bk
+from . import fused_scan as _fs
 from . import pairwise_dist as _pd
 from . import topk_select as _tk
 
-__all__ = ["pairwise_dist_op", "bucket_kselect_op", "topk_select_op", "INTERPRET"]
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or (
-    jax.default_backend() != "tpu"
-)
+__all__ = [
+    "pairwise_dist_op",
+    "bucket_kselect_op",
+    "topk_select_op",
+    "fused_scan_merge_op",
+    "register_scan_backend",
+    "get_scan_backend",
+    "scan_backend_names",
+]
 
 
 def _pad_to(x, n, fill):
@@ -32,7 +54,6 @@ def _pad_to(x, n, fill):
 
 def pairwise_dist_op(qpos, ppos, valid=None, *, interpret: bool | None = None):
     """(Q,2) x (C,2) [+ (C,) mask] -> (Q, C) masked squared distances."""
-    interpret = INTERPRET if interpret is None else interpret
     q, c = qpos.shape[0], ppos.shape[0]
     qp = int(np.ceil(q / _pd.Q_TILE)) * _pd.Q_TILE
     cp = int(np.ceil(c / _pd.C_TILE)) * _pd.C_TILE
@@ -58,7 +79,6 @@ def bucket_kselect_op(
     interpret: bool | None = None,
 ):
     """(Q,2) queries x (C,2) shared candidates -> (Q,) k-selection radius."""
-    interpret = INTERPRET if interpret is None else interpret
     q, c = qpos.shape[0], ppos.shape[0]
     qp = int(np.ceil(q / _bk.Q_TILE)) * _bk.Q_TILE
     if valid is None:
@@ -81,10 +101,103 @@ def bucket_kselect_op(
 
 def topk_select_op(d2, ids, *, k: int, interpret: bool | None = None):
     """(Q, C) distances + ids -> ((Q, k), (Q, k)) ascending top-k smallest."""
-    interpret = INTERPRET if interpret is None else interpret
     q = d2.shape[0]
     qp = int(np.ceil(q / _tk.Q_TILE)) * _tk.Q_TILE
     d2p = _pad_to(d2.astype(jnp.float32), qp, jnp.inf)
     idsp = _pad_to(ids.astype(jnp.int32), qp, -1)
     out_d, out_i = _tk.topk_select(d2p, idsp, k=k, interpret=interpret)
     return out_d[:q], out_i[:q]
+
+
+def fused_scan_merge_op(
+    qpos, cpos, cids, valid, best_d, best_i, *, k: int,
+    interpret: bool | None = None,
+):
+    """Pad-and-dispatch wrapper for :func:`repro.kernels.fused_scan.fused_scan_merge`.
+
+    qpos (Q,2) x per-query windows cpos (Q,W,2) / cids / valid (Q,W) x current
+    lists best_d/best_i (Q,k) -> merged (Q,k) lists.
+    """
+    q = qpos.shape[0]
+    qp = int(np.ceil(q / _fs.Q_TILE)) * _fs.Q_TILE
+    qx = _pad_to(qpos[:, 0].astype(jnp.float32), qp, 0)
+    qy = _pad_to(qpos[:, 1].astype(jnp.float32), qp, 0)
+    cx = _pad_to(cpos[:, :, 0].astype(jnp.float32), qp, 0)
+    cy = _pad_to(cpos[:, :, 1].astype(jnp.float32), qp, 0)
+    ci = _pad_to(cids.astype(jnp.int32), qp, -1)
+    v = _pad_to(valid, qp, False)
+    bd = _pad_to(best_d.astype(jnp.float32), qp, jnp.inf)
+    bi = _pad_to(best_i.astype(jnp.int32), qp, -1)
+    out_d, out_i = _fs.fused_scan_merge(
+        qx, qy, cx, cy, ci, v, bd, bi, k=k, interpret=interpret
+    )
+    return out_d[:q], out_i[:q]
+
+
+# --------------------------------------------------------------------------
+# SCAN backend registry
+# --------------------------------------------------------------------------
+
+# merge(qpos, cpos, cids, valid, best_d, best_i, k) -> (best_d, best_i)
+ScanMergeFn = Callable[..., tuple]
+
+_SCAN_BACKENDS: dict[str, ScanMergeFn] = {}
+
+
+def register_scan_backend(name: str):
+    """Decorator: register a SCAN merge strategy under ``name``."""
+
+    def deco(fn: ScanMergeFn) -> ScanMergeFn:
+        _SCAN_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_scan_backend(name: str) -> ScanMergeFn:
+    try:
+        return _SCAN_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scan backend {name!r}; registered: {scan_backend_names()}"
+        ) from None
+
+
+def scan_backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_SCAN_BACKENDS))
+
+
+def _masked_d2(qpos, cpos, valid):
+    dx = cpos[:, :, 0] - qpos[:, None, 0]
+    dy = cpos[:, :, 1] - qpos[:, None, 1]
+    return jnp.where(valid, dx * dx + dy * dy, jnp.inf)
+
+
+@register_scan_backend("dense_topk")
+def _dense_topk_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
+    """The seed path: concatenated row -> XLA ``lax.top_k`` (sort-based)."""
+    d2 = _masked_d2(qpos, cpos, valid)
+    all_d = jnp.concatenate([best_d, d2], axis=1)
+    all_i = jnp.concatenate([best_i, cids.astype(jnp.int32)], axis=1)
+    neg, sel = jax.lax.top_k(-all_d, k)
+    out_d = -neg
+    out_i = jnp.take_along_axis(all_i, sel, axis=1)
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+
+
+@register_scan_backend("fused_bucket")
+def _fused_bucket_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
+    """Fused Pallas kernel; auto-interprets off-TPU (runtime.default_interpret)."""
+    return fused_scan_merge_op(qpos, cpos, cids, valid, best_d, best_i, k=k)
+
+
+@register_scan_backend("brute")
+def _brute_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
+    """Garcia-baseline flavour: full row sort, selection cost independent of k."""
+    d2 = _masked_d2(qpos, cpos, valid)
+    all_d = jnp.concatenate([best_d, d2], axis=1)
+    all_i = jnp.concatenate([best_i, cids.astype(jnp.int32)], axis=1)
+    order = jnp.argsort(all_d, axis=1)
+    out_d = jnp.take_along_axis(all_d, order[:, :k], axis=1)
+    out_i = jnp.take_along_axis(all_i, order[:, :k], axis=1)
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)

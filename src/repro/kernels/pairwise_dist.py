@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import default_interpret
+
 __all__ = ["pairwise_dist", "Q_TILE", "C_TILE"]
 
 Q_TILE = 8
@@ -37,12 +39,14 @@ def _kernel(qx_ref, qy_ref, px_ref, py_ref, valid_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def pairwise_dist(qx, qy, px, py, valid, *, interpret: bool = True):
+def pairwise_dist(qx, qy, px, py, valid, *, interpret: bool | None = None):
     """(Q,),(Q,),(C,),(C,),(C,)bool -> (Q, C) f32 masked squared distances.
 
     Q must be a multiple of Q_TILE and C of C_TILE (wrappers pad); ``interpret``
-    runs the kernel body on CPU for validation (TPU is the target).
+    runs the kernel body on CPU for validation (None = auto-detect).
     """
+    if interpret is None:
+        interpret = default_interpret()
     q, c = qx.shape[0], px.shape[0]
     assert q % Q_TILE == 0 and c % C_TILE == 0, (q, c)
     grid = (q // Q_TILE, c // C_TILE)

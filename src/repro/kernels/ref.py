@@ -52,9 +52,12 @@ def bucket_kselect_ref(qx, qy, px, py, valid, *, k: int, num_bins: int, iters: i
             jnp.take_along_axis(cum, jnp.maximum(sel - 1, 0)[:, None], 1)[:, 0],
             0,
         )
-        lo = lo + sel * width
-        hi = lo + width
-        kth = kth - below
+        # float guard: edge rounding can push the k-th element out of [lo, hi);
+        # keep the previous (still-valid) interval in that case (kernel mirror).
+        ok = cum[:, -1] >= kth
+        lo = jnp.where(ok, lo + sel * width, lo)
+        hi = jnp.where(ok, lo + width, hi)
+        kth = jnp.where(ok, kth - below, kth)
     return jnp.where(n_valid < k, big, hi)
 
 

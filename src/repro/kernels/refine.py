@@ -1,0 +1,47 @@
+"""One guarded bucket-refinement round, shared by the Pallas kernel bodies.
+
+Factored out of ``bucket_kselect`` and ``fused_scan`` so the Alabi refinement
+(including the float-edge guard, DESIGN.md §4) has a single kernel-side
+spelling.  The jnp oracles (``kernels/ref.py``, ``core/kselect.py``) keep
+independent mirrors on purpose — they are the correctness contracts the
+allclose sweeps compare the kernels against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bucket_refine_step"]
+
+
+def bucket_refine_step(d2, lo, hi, kth, num_bins: int):
+    """Descend one histogram level toward the k-th element.
+
+    d2: (T, C) population, invalid entries pre-masked to +inf; lo/hi: (T,)
+    current half-open interval; kth: (T,) elements still wanted inside it.
+    Returns the refined (lo, hi, kth).  Float-edge guard: if bucket-edge
+    rounding pushed the k-th element out of [lo, hi) (no bucket reaches kth),
+    the interval is kept — it still satisfies ``count(d < hi) >= kth``.
+    """
+    bins = jnp.arange(num_bins, dtype=jnp.int32)
+    width = jnp.maximum((hi - lo) / num_bins, 1e-30)
+    b = jnp.clip(
+        jnp.floor((d2 - lo[:, None]) / width[:, None]), 0, num_bins - 1
+    ).astype(jnp.int32)
+    in_range = (d2 >= lo[:, None]) & (d2 < hi[:, None])
+    # (T, C, NB) bin-broadcast compare -> per-row histogram (VPU-friendly)
+    onehot = (b[:, :, None] == bins[None, None, :]) & in_range[:, :, None]
+    hist = onehot.astype(jnp.int32).sum(axis=1)
+    cum = jnp.cumsum(hist, axis=1)
+    sel = jnp.argmax(cum >= kth[:, None], axis=1)
+    below = jnp.where(
+        sel > 0,
+        jnp.take_along_axis(cum, jnp.maximum(sel - 1, 0)[:, None], 1)[:, 0],
+        0,
+    )
+    new_lo = lo + sel.astype(lo.dtype) * width
+    ok = cum[:, num_bins - 1] >= kth
+    return (
+        jnp.where(ok, new_lo, lo),
+        jnp.where(ok, new_lo + width, hi),
+        jnp.where(ok, kth - below, kth),
+    )

@@ -1,0 +1,22 @@
+"""Interpret-mode auto-detection shared by every Pallas wrapper/kernel.
+
+Policy: compile to Mosaic when a TPU backend is actually present, fall back to
+``interpret=True`` (kernel body evaluated with jnp on the host) anywhere else,
+so the identical program runs in CI containers and on accelerators with no
+caller opt-in.  ``REPRO_PALLAS_INTERPRET=0/1`` force-overrides both ways (e.g.
+to debug a kernel body on TPU, or to exercise the compile path in a unit test).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret"]
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import default_interpret
+
 __all__ = ["topk_select", "Q_TILE"]
 
 Q_TILE = 8
@@ -52,8 +54,10 @@ def _make_kernel(k: int, c: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def topk_select(d2, ids, *, k: int, interpret: bool = True):
+def topk_select(d2, ids, *, k: int, interpret: bool | None = None):
     """(Q, C) distances + (Q, C) ids -> ((Q, k) dists, (Q, k) ids), ascending."""
+    if interpret is None:
+        interpret = default_interpret()
     q, c = d2.shape
     assert q % Q_TILE == 0, q
     grid = (q // Q_TILE,)

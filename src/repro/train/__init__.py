@@ -1,7 +1,12 @@
 from .checkpoint import latest_step, restore_checkpoint, restore_latest, save_checkpoint
 from .compression import crosspod_mean, crosspod_mean_int8, init_error_feedback
 from .optimizer import OptConfig, adamw_update, clip_by_global_norm, global_norm, init_opt
-from .step import grads_and_loss, make_train_step, make_train_step_crosspod
+from .step import (
+    grads_and_loss,
+    make_train_step,
+    make_train_step_crosspod,
+    shard_map_compat,
+)
 
 __all__ = [
     "latest_step",
@@ -19,4 +24,5 @@ __all__ = [
     "grads_and_loss",
     "make_train_step",
     "make_train_step_crosspod",
+    "shard_map_compat",
 ]

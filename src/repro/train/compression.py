@@ -37,7 +37,12 @@ def crosspod_mean_int8(grads, err, axis: str = "pod"):
 
     Must run inside shard_map with ``axis`` manual.  Returns (mean_grads, new_err).
     """
-    npod = jax.lax.axis_size(axis)
+    # jax >= 0.6 has lax.axis_size; 0.4.x spells it psum(1, axis)
+    npod = (
+        jax.lax.axis_size(axis)
+        if hasattr(jax.lax, "axis_size")
+        else jax.lax.psum(1, axis)
+    )
 
     def leaf(g, e):
         g = g.astype(jnp.float32) + e

@@ -1,7 +1,10 @@
 """Property tests for Morton coding (the structural backbone of the index)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container: deterministic fallback shim
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import morton
 

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container: deterministic fallback shim
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import build_index, knn_bruteforce, knn_query_batch, knn_query_batch_chunked
 from repro.data import make_workload

@@ -1,7 +1,10 @@
 """PR-quadtree invariants (paper Sec. 4.1)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container: deterministic fallback shim
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import build_index, leaf_of_points, reindex_objects
 from repro.core.quadtree import pyramid_offset

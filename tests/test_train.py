@@ -18,6 +18,7 @@ from repro.train import (
     restore_checkpoint,
     restore_latest,
     save_checkpoint,
+    shard_map_compat,
 )
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -103,7 +104,7 @@ def test_int8_crosspod_compression_accuracy():
 
     from jax.sharding import PartitionSpec as P
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         lambda g, e: crosspod_mean_int8(g, e, "pod"),
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), grads), jax.tree.map(lambda _: P(), err)),
