@@ -17,33 +17,41 @@ import time
 
 
 def _smoke(out_path: str) -> None:
+    import jax
     import numpy as np
 
     from benchmarks import s4_backends
     from repro.core import EngineConfig, TickEngine, available_backends
     from repro.data import make_workload
 
-    rec: dict = {"schema": 1, "unit": "seconds"}
+    rec: dict = {"schema": 2, "unit": "seconds"}
+    rec["device_count"] = int(jax.device_count())
     rec["backends"] = s4_backends.run(
         n_objects=8_000, k=16, dists=("uniform",), chunk=2048, out=None
     )
 
-    # engine steady-state: per-tick wall time after warmup, default backend
-    ticks = {}
-    for backend in available_backends():
+    # engine steady-state: per-tick wall time after warmup, default backend;
+    # every SCAN backend on the single plan, plus the sharded plan over
+    # whatever mesh this process sees (1 locally, 8 in the CI multi-device job)
+    def engine_row(backend, plan):
         eng = TickEngine(
             EngineConfig(k=16, th_quad=192, l_max=7, window=128, chunk=2048,
-                         backend=backend)
+                         backend=backend, plan=plan)
         )
         w = make_workload(8_000, "gaussian", seed=0)
         results = eng.run(w, ticks=4)
         steady = [r.wall_s for r in results[1:]]
-        ticks[backend] = {
+        return {
+            "plan": eng.plan.name,
+            "devices": int(jax.device_count()),
             "tick_s_median": float(np.median(steady)),
             "queries_per_s": float(8_000 / np.median(steady)),
             "candidates_per_tick": float(np.mean([r.candidates for r in results[1:]])),
         }
+
+    ticks = {b: engine_row(b, "single") for b in available_backends()}
     rec["engine"] = ticks
+    rec["engine_sharded"] = engine_row("dense_topk", "sharded")
     rec["timestamp"] = time.time()
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -74,6 +82,7 @@ def main() -> None:
         s3_vary_k,
         s3_vs_cpu,
         s4_backends,
+        s5_scaling,
     )
 
     s1_treeheight.run(n_objects=30_000, ks=(8, 32), th_quads=(48, 384, 1536))
@@ -84,6 +93,7 @@ def main() -> None:
     s3_vary_k.run(n=20_000, ks=(8, 64), dists=("uniform",))
     s3_vary_k.run_update_strategies(q=64, c=512, ks=(32,))
     s4_backends.run(n_objects=20_000, k=32, out="BENCH_backends.json")
+    s5_scaling.run(objects=8_000, ticks=4, out="BENCH_scaling.json")
     kernels.run(q=64, c=512, k=16)
 
     # roofline summary (optimized defaults if recorded, else baseline)

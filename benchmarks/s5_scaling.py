@@ -1,0 +1,137 @@
+"""S5: plan x device-count scaling sweep on a forced-host-device CPU mesh.
+
+New axis introduced by the ExecutionPlan refactor (DESIGN.md §10): the same
+tick engine is run under the ``single`` plan (the one-device reference row)
+and the ``sharded`` plan at 1/2/4/8 forced host devices, at FIXED total query
+load, and per-tick latency + candidates/s are recorded per (plan, devices)
+row into ``BENCH_scaling.json``.
+
+Each row runs in a subprocess because ``--xla_force_host_platform_device_count``
+must be set before jax initializes.  On a CPU host the forced devices share
+the same cores, so this measures the *overhead* of the mesh decomposition
+(shard_map fan-out, psum, gather) rather than real speedup — the point is
+that the decomposition is load-bearing and cheap; accelerator meshes supply
+the parallelism.
+
+  PYTHONPATH=src python benchmarks/s5_scaling.py [--objects N] [--ticks T]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEFAULT_DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _child(args) -> None:
+    """One (plan, devices) row; prints a tagged JSON line for the parent."""
+    import numpy as np
+
+    from repro.core import EngineConfig, TickEngine
+    from repro.data import make_workload
+
+    import jax
+
+    eng = TickEngine(
+        EngineConfig(k=args.k, th_quad=192, l_max=7, window=128,
+                     chunk=args.chunk, plan=args.plan,
+                     mesh_shape=args.devices if args.plan == "sharded" else None)
+    )
+    w = make_workload(args.objects, "gaussian", seed=0)
+    results = eng.run(w, ticks=args.ticks)
+    steady = [r.wall_s for r in results[1:]]
+    cand = float(np.mean([r.candidates for r in results[1:]]))
+    tick_s = float(np.median(steady))
+    row = {
+        "plan": args.plan,
+        "devices": int(jax.device_count()),
+        "objects": args.objects,
+        "k": args.k,
+        "chunk": args.chunk,
+        "ticks": args.ticks,
+        "tick_s_median": tick_s,
+        "queries_per_s": args.objects / tick_s,
+        "candidates_per_s": cand / tick_s,
+        "candidates_per_tick": cand,
+    }
+    print("S5ROW " + json.dumps(row), flush=True)
+
+
+def run(
+    objects: int = 8_000,
+    ticks: int = 4,
+    k: int = 16,
+    chunk: int = 1024,
+    device_counts=DEFAULT_DEVICE_COUNTS,
+    out: str | None = "BENCH_scaling.json",
+):
+    """Sweep plan x device count at fixed total Q; returns the row list."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    rows = []
+    sweep = [("single", 1)] + [("sharded", d) for d in device_counts]
+    for plan, devices in sweep:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+        cmd = [
+            sys.executable, os.path.abspath(__file__), "--child",
+            "--plan", plan, "--devices", str(devices),
+            "--objects", str(objects), "--ticks", str(ticks),
+            "--k", str(k), "--chunk", str(chunk),
+        ]
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"s5 child (plan={plan}, devices={devices}) failed:\n"
+                + r.stderr[-2000:]
+            )
+        row = json.loads(
+            next(l for l in r.stdout.splitlines() if l.startswith("S5ROW "))[6:]
+        )
+        rows.append(row)
+        print(f"s5_scaling/{plan}_d{devices},"
+              f"{row['tick_s_median'] * 1e6:.1f},"
+              f"qps={row['queries_per_s']:.0f}", flush=True)
+    if out:
+        rec = {
+            "schema": 1,
+            "unit": "seconds",
+            "fixed_total_queries": objects,
+            "rows": rows,
+            "timestamp": time.time(),
+        }
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"# wrote {out}", flush=True)
+    return rows
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--plan", default="single")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--objects", type=int, default=8_000)
+    ap.add_argument("--ticks", type=int, default=4)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--out", default="BENCH_scaling.json")
+    args = ap.parse_args()
+    if args.child:
+        _child(args)
+        return
+    run(objects=args.objects, ticks=args.ticks, k=args.k, chunk=args.chunk,
+        out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,23 +2,26 @@
 
 30 ticks (as in the paper's evaluation) of 50K moving objects, one k-NN query
 per object per tick, timeslice semantics, index reuse + drift-triggered
-rebuild.  This is the deployable TickEngine service loop.
+rebuild.  This is the deployable TickEngine service loop, on either execution
+plan: ``single`` (one device) or ``sharded`` (the 1-D ``("query",)`` mesh,
+DESIGN.md §10).
 
-  PYTHONPATH=src python examples/moving_objects_service.py [--objects N] [--ticks T]
+  PYTHONPATH=src python examples/moving_objects_service.py \
+      [--objects N] [--ticks T] [--plan single|sharded] [--devices D]
+
+``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
+initializes, so the sharded plan runs on a real D-device mesh without
+accelerators.
 """
 import argparse
+import os
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-import numpy as np
 
-from repro.core import EngineConfig, TickEngine, available_backends
-from repro.data import make_workload
-
-
-def main():
+def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--objects", type=int, default=50_000)
     ap.add_argument("--ticks", type=int, default=30)
@@ -26,16 +29,43 @@ def main():
     ap.add_argument("--distribution", default="gaussian",
                     choices=["uniform", "gaussian", "network"])
     ap.add_argument("--backend", default="dense_topk",
-                    choices=list(available_backends()),
                     help="SCAN-step selection backend (executor registry)")
-    args = ap.parse_args()
+    ap.add_argument("--plan", default="single", choices=["single", "sharded"],
+                    help="execution plan (plan registry)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size on the ('query',) axis; on CPU also "
+                         "forces that many host devices (set before jax init)")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse_args()
+
+    # the device count must be pinned before the first jax import
+    if args.devices and args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    import jax
+    import numpy as np
+
+    from repro.core import EngineConfig, TickEngine, available_backends
+    from repro.data import make_workload
+
+    if args.backend not in available_backends():
+        raise SystemExit(f"--backend must be one of {available_backends()}")
 
     engine = TickEngine(EngineConfig(k=args.k, th_quad=384, l_max=8, window=256,
-                                     chunk=8192, backend=args.backend))
+                                     chunk=8192, backend=args.backend,
+                                     plan=args.plan, mesh_shape=args.devices))
     workload = make_workload(args.objects, args.distribution, seed=0)
 
     print(f"serving {args.objects} objects x {args.ticks} ticks "
           f"({args.distribution}, k={args.k}, backend={args.backend})")
+    print(f"{engine.plan.describe()}  (jax sees {jax.device_count()} "
+          f"{jax.default_backend()} device(s))")
 
     def on_tick(res):
         print(f"tick {res.tick:2d}: {res.wall_s * 1e3:7.1f} ms "
@@ -46,7 +76,8 @@ def main():
     results = engine.run(workload, ticks=args.ticks, query_rate=1.0, on_tick=on_tick)
     steady = [r.wall_s for r in results[1:]]
     print(f"\nsteady state: {np.median(steady) * 1e3:.1f} ms/tick = "
-          f"{args.objects / np.median(steady):,.0f} queries/s on one CPU core")
+          f"{args.objects / np.median(steady):,.0f} queries/s "
+          f"[{engine.plan.describe()}]")
     print("(the paper's GPU pipeline is the TPU dry-run target; CPU numbers "
           "exercise the identical program)")
 

@@ -1,13 +1,24 @@
 """The paper's contribution: iterated batched k-NN over moving objects, in JAX."""
 from .baseline import knn_bruteforce, knn_bruteforce_chunked
 from .cpu_ref import KDTree
-from .executor import QueryExecutor, available_backends, resolve_executor
+from .executor import (
+    QueryExecutor,
+    available_backends,
+    available_plans,
+    resolve_executor,
+    resolve_plan,
+)
 from .kselect import find_kdist
-from .pipeline import (
-    KnnStats,
+from .pipeline import KnnStats, knn_query_batch
+from .plan import (
+    ExecutionPlan,
+    ShardedPlan,
+    SinglePlan,
     knn_chunked_device,
-    knn_query_batch,
     knn_query_batch_chunked,
+    knn_sharded_device,
+    pad_queries,
+    run_plan_device,
 )
 from .quadtree import QuadtreeIndex, build_index, leaf_of_points, reindex_objects
 from .ticks import EngineConfig, TickEngine, TickResult
@@ -18,12 +29,20 @@ __all__ = [
     "KDTree",
     "QueryExecutor",
     "available_backends",
+    "available_plans",
     "resolve_executor",
+    "resolve_plan",
     "find_kdist",
     "KnnStats",
     "knn_chunked_device",
     "knn_query_batch",
     "knn_query_batch_chunked",
+    "knn_sharded_device",
+    "pad_queries",
+    "run_plan_device",
+    "ExecutionPlan",
+    "SinglePlan",
+    "ShardedPlan",
     "QuadtreeIndex",
     "build_index",
     "leaf_of_points",

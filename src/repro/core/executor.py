@@ -8,9 +8,17 @@ name (``EngineConfig.backend`` / ``--backend``), so swapping the selection
 strategy — XLA top-k, the fused Pallas kernel, full-sort brute force, or any
 future sharded/approximate variant — touches no pipeline code.
 
+Since the ExecutionPlan refactor (DESIGN.md §10) the seam has TWO orthogonal
+axes, both selected by name at this layer boundary:
+
+  * **backend** (*what* merges a candidate window) — this module;
+  * **plan** (*where* the sweep runs: one device or a ``("query",)`` mesh) —
+    ``core/plan.py``; re-exposed here (:func:`available_plans` /
+    :func:`resolve_plan`) so callers configure both axes at one seam.
+
 ``QueryExecutor`` is a frozen (hence hashable) dataclass so it can ride
 through ``jax.jit`` as a *static* argument: a jitted pipeline specializes per
-backend, exactly like it specializes per ``k``/``window``.
+backend, exactly like it specializes per ``k``/``window`` — and per plan.
 """
 from __future__ import annotations
 
@@ -18,12 +26,32 @@ import dataclasses
 
 from repro.kernels import get_scan_backend, scan_backend_names
 
-__all__ = ["QueryExecutor", "resolve_executor", "available_backends"]
+__all__ = [
+    "QueryExecutor",
+    "resolve_executor",
+    "available_backends",
+    "available_plans",
+    "resolve_plan",
+]
 
 
 def available_backends() -> tuple[str, ...]:
     """Names accepted by ``resolve_executor`` / ``EngineConfig.backend``."""
     return scan_backend_names()
+
+
+def available_plans() -> tuple[str, ...]:
+    """Names accepted by ``resolve_plan`` / ``EngineConfig.plan``."""
+    from .plan import plan_names  # lazy: plan.py imports pipeline -> executor
+
+    return plan_names()
+
+
+def resolve_plan(plan, *, num_devices=None):
+    """Name | ExecutionPlan | None -> ExecutionPlan (default: ``single``)."""
+    from .plan import resolve_plan as impl
+
+    return impl(plan, num_devices=num_devices)
 
 
 @dataclasses.dataclass(frozen=True)

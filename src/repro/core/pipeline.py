@@ -24,11 +24,13 @@ The SCAN step's distance+selection is NOT inlined here: it dispatches through a
 (``dense_topk`` | ``fused_bucket`` | ``brute`` — DESIGN.md §6), carried through
 ``jax.jit`` as a static argument.
 
-Batching: ``knn_query_batch`` runs one device program over the whole batch;
-``knn_query_batch_chunked`` bounds memory by mapping the same program over
-fixed-shape query chunks with ``lax.map`` *inside one jitted call* — chunks
-never round-trip to the host (the seed's Python chunk loop paid one dispatch +
-one device->host copy per chunk per tick).
+Batching: ``knn_query_batch`` runs one device program over the whole batch.
+Memory-bounded chunking and device layout live one layer up, behind the
+ExecutionPlan seam (``core/plan.py``, DESIGN.md §10): the ``single`` plan maps
+this module's sorted-query program over fixed-shape chunks with ``lax.map``
+inside one jitted call, the ``sharded`` plan additionally splits the sorted
+batch across a device mesh with ``shard_map``.  (``knn_query_batch_chunked``
+remains importable here as a thin delegate — see its docstring.)
 
 Invariants that make block-skipping sound (proved in tests):
   * cursors ``cl``/``cr`` always sit on leaf boundaries;
@@ -38,7 +40,6 @@ Invariants that make block-skipping sound (proved in tests):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -51,8 +52,6 @@ from .quadtree import QuadtreeIndex
 __all__ = [
     "knn_query_batch",
     "knn_query_batch_chunked",
-    "knn_chunked_device",
-    "pad_queries",
     "default_max_nav",
     "KnnStats",
 ]
@@ -308,26 +307,6 @@ def _resolve_max_nav(index: QuadtreeIndex, max_nav):
     return default_max_nav(index.l_max) if max_nav is None else max_nav
 
 
-def pad_queries(qpos, qid, chunk: int):
-    """Host-side pad of (Q,2)/(Q,) to a whole number of chunks.
-
-    Padding rows clone the last query with qid=-2 (results discarded by the
-    caller via ``[:Q]``).  Done on the host so the jitted chunked program is
-    compiled per *chunk count*, never per raw query count.
-    """
-    import numpy as np
-
-    nq = qpos.shape[0]
-    n_chunks = max(1, -(-nq // chunk))
-    padded = n_chunks * chunk
-    if padded == nq:
-        return qpos, qid
-    pad = padded - nq
-    qpos = np.concatenate([qpos, np.tile(np.asarray(qpos[-1:]), (pad, 1))])
-    qid = np.concatenate([np.asarray(qid), np.full((pad,), -2, np.int32)])
-    return qpos, qid
-
-
 def knn_query_batch(
     index: QuadtreeIndex,
     qpos: jnp.ndarray,
@@ -376,99 +355,13 @@ def knn_query_batch(
     return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
 
 
-@partial(
-    jax.jit,
-    static_argnames=("k", "window", "chunk", "max_nav", "max_iters", "executor"),
-)
-def knn_chunked_device(
-    index: QuadtreeIndex,
-    qpos: jnp.ndarray,
-    qid: jnp.ndarray,
-    *,
-    k: int,
-    window: int,
-    chunk: int,
-    max_nav: int,
-    max_iters: int,
-    executor: QueryExecutor,
-):
-    """Memory-bounded batch k-NN as ONE device program.
+def knn_query_batch_chunked(index, qpos, qid=None, **kw):
+    """Delegates to :func:`repro.core.plan.knn_query_batch_chunked` — chunking
+    and device layout are rehomed behind the ExecutionPlan seam.  Kept here so
+    the serving-layer contract test (tests/test_backends.py) can pin that the
+    tick engine never routes through a host-side chunk driver.  The lazy
+    import avoids a module cycle (plan.py imports this module's trace-level
+    internals)."""
+    from .plan import knn_query_batch_chunked as impl
 
-    Queries are Morton-sorted globally (so chunks are spatially coherent) and
-    processed by ``lax.map`` over the same compiled chunk program — no host
-    round trips between chunks.  ``Q`` must already be a whole number of
-    chunks: callers pad on the host (:func:`pad_queries`) so the compiled
-    program is keyed by *chunk count*, not by the raw query count — variable
-    per-tick batch sizes reuse the same executable (the seed driver's "one jit
-    cache" property).
-
-    Returns (nn_idx (Q,k) i32, nn_dist (Q,k) f32 euclidean, stats) in the
-    caller's query order (padding rows come back in their input positions).
-    """
-    nq = qpos.shape[0]
-    assert nq % chunk == 0, (nq, chunk)  # pad_queries upholds this
-    qpos = qpos.astype(jnp.float32)
-    qid = qid.astype(jnp.int32)
-    order, inv = _sort_unsort(index, qpos)
-    qpos_s, qid_s = qpos[order], qid[order]
-    n_chunks = nq // chunk
-
-    def one_chunk(args):
-        qp, qi = args
-        return _knn_sorted_impl(
-            index, qp, qi, k, window, max_nav, max_iters, executor
-        )
-
-    idx_c, d2_c, stats_c = jax.lax.map(
-        one_chunk,
-        (qpos_s.reshape(n_chunks, chunk, 2), qid_s.reshape(n_chunks, chunk)),
-    )
-    idx_s = idx_c.reshape(nq, k)
-    d2_s = d2_c.reshape(nq, k)
-    stats = KnnStats(
-        iterations=stats_c.iterations.sum(),
-        candidates=stats_c.candidates.sum(),
-        leaves_visited=stats_c.leaves_visited.sum(),
-    )
-    return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
-
-
-def knn_query_batch_chunked(
-    index: QuadtreeIndex,
-    qpos,
-    qid=None,
-    *,
-    k: int = 32,
-    window: int = 128,
-    chunk: int = 8192,
-    max_nav: int | None = None,
-    max_iters: int = 100_000,
-    backend: str | QueryExecutor | None = None,
-):
-    """Host-friendly wrapper over :func:`knn_chunked_device` (numpy in/out)."""
-    import numpy as np
-
-    nq = qpos.shape[0]
-    if qid is None:
-        qid = np.full((nq,), -2, np.int32)
-    qpos_p, qid_p = pad_queries(np.asarray(qpos), np.asarray(qid), chunk)
-    ii, dd, stats = knn_chunked_device(
-        index,
-        jnp.asarray(qpos_p, jnp.float32),
-        jnp.asarray(qid_p, jnp.int32),
-        k=k,
-        window=window,
-        chunk=chunk,
-        max_nav=_resolve_max_nav(index, max_nav),
-        max_iters=max_iters,
-        executor=resolve_executor(backend),
-    )
-    return (
-        np.asarray(ii[:nq]),
-        np.asarray(dd[:nq]),
-        KnnStats(
-            iterations=int(stats.iterations),
-            candidates=float(stats.candidates),
-            leaves_visited=int(stats.leaves_visited),
-        ),
-    )
+    return impl(index, qpos, qid, **kw)

@@ -1,0 +1,398 @@
+"""ExecutionPlan — how a tick's query batch is laid onto devices (DESIGN.md §10).
+
+The pipeline (``core/pipeline.py``) knows how to answer *sorted* queries
+against an index; the serving layer (``core/ticks.py``) knows *when* to run a
+tick.  The plan is the seam between them: it owns device layout — how the
+Morton-sorted batch is chunked, split across a mesh, and gathered back.  Two
+plans ship:
+
+``single``
+    Today's path: global Morton sort, ``lax.map`` over fixed-shape chunks on
+    one device (the chunked sweep formerly inlined in
+    ``pipeline.knn_chunked_device``, rehomed here behind the seam).
+
+``sharded``
+    A 1-D ``("query",)`` mesh (``launch.mesh.make_query_mesh``) laid out by
+    the spatial logical-axis rules (``repro.dist.SPATIAL_RULES``): the
+    quadtree index — positions, ids, starts, count pyramid — is *replicated*
+    across devices, the Morton-sorted query batch is split into per-device
+    contiguous shards with ``shard_map``, each device runs the identical
+    masked dense iteration locally over its shard, and the per-shard
+    ``(k, dist, id)`` lists are gathered by concatenation (query shards are
+    disjoint, so the gather needs no merge; the merge primitive
+    ``kernels/merge_topk.py`` is the reduction step reserved for the future
+    object-sharded plan).  The drift statistic is ``psum``-reduced over the
+    mesh so the serving layer's rebuild trigger sees the whole tick's volume.
+
+Because every shard boundary coincides with a chunk boundary (the host pads
+the batch to ``num_devices * chunk``), the per-chunk programs are identical to
+the single-device plan's — sharded results are **bit-identical** to ``single``
+(pinned by tests/test_plan.py across all three workload families).
+
+Plans are frozen (hence hashable) dataclasses, carried through ``jax.jit`` as
+*static* arguments exactly like :class:`repro.core.executor.QueryExecutor`:
+the jitted tick step specializes per (plan, backend) pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import SPATIAL_RULES, shard_map_compat, use_rules
+from repro.launch.mesh import make_query_mesh
+
+from .pipeline import (
+    KnnStats,
+    _knn_sorted_impl,
+    _resolve_max_nav,
+    _sort_unsort,
+)
+from .quadtree import QuadtreeIndex
+
+__all__ = [
+    "ExecutionPlan",
+    "SinglePlan",
+    "ShardedPlan",
+    "register_plan",
+    "resolve_plan",
+    "plan_names",
+    "pad_queries",
+    "knn_chunked_device",
+    "knn_sharded_device",
+    "knn_query_batch_chunked",
+    "run_plan_device",
+]
+
+
+def pad_queries(qpos, qid, multiple: int):
+    """Host-side pad of (Q,2)/(Q,) to a whole number of ``multiple`` rows.
+
+    ``multiple`` is the plan's padding granularity (:meth:`ExecutionPlan.
+    pad_multiple`): ``chunk`` for the single plan, ``num_devices * chunk`` for
+    the sharded plan — one pad, host-side, so every device shard is a whole
+    number of identical fixed-shape chunks and the compiled program is keyed
+    by *chunk count per shard*, never by the raw query count.  Padding rows
+    clone the last query with qid=-2; callers strip them after the gather via
+    ``[:Q]`` (the global unsort returns them to the tail).
+    """
+    import numpy as np
+
+    nq = qpos.shape[0]
+    n_blocks = max(1, -(-nq // multiple))
+    padded = n_blocks * multiple
+    if padded == nq:
+        return qpos, qid
+    pad = padded - nq
+    qpos = np.concatenate([qpos, np.tile(np.asarray(qpos[-1:]), (pad, 1))])
+    qid = np.concatenate([np.asarray(qid), np.full((pad,), -2, np.int32)])
+    return qpos, qid
+
+
+def _chunked_sweep(index, qpos_s, qid_s, *, k, window, chunk, max_nav,
+                   max_iters, executor):
+    """``lax.map`` of the sorted-query program over fixed-shape chunks.
+
+    Trace-level body shared by both plans: on the single plan it covers the
+    whole batch, on the sharded plan it is the device-local program inside
+    ``shard_map``.  Inputs must already be Morton-sorted and a whole number of
+    chunks.
+    """
+    nq = qpos_s.shape[0]
+    n_chunks = nq // chunk
+
+    def one_chunk(args):
+        qp, qi = args
+        return _knn_sorted_impl(
+            index, qp, qi, k, window, max_nav, max_iters, executor
+        )
+
+    idx_c, d2_c, stats_c = jax.lax.map(
+        one_chunk,
+        (qpos_s.reshape(n_chunks, chunk, 2), qid_s.reshape(n_chunks, chunk)),
+    )
+    stats = KnnStats(
+        iterations=stats_c.iterations.sum(),
+        candidates=stats_c.candidates.sum(),
+        leaves_visited=stats_c.leaves_visited.sum(),
+    )
+    return idx_c.reshape(nq, k), d2_c.reshape(nq, k), stats
+
+
+class ExecutionPlan:
+    """Interface: device layout of one tick's query sweep (see module doc)."""
+
+    name: ClassVar[str]
+
+    def pad_multiple(self, chunk: int) -> int:
+        """Host-side padding granularity for :func:`pad_queries`."""
+        raise NotImplementedError
+
+    def run(self, index: QuadtreeIndex, qpos, qid, *, k, window, chunk,
+            max_nav, max_iters, executor):
+        """Trace-level tick sweep: (index, padded Q) -> (idx, dist, stats).
+
+        ``qpos.shape[0]`` must be a whole multiple of ``pad_multiple(chunk)``;
+        results come back in the caller's query order, distances euclidean.
+        """
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        """Human-readable mesh/layout summary (the example service prints it)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SinglePlan(ExecutionPlan):
+    """One device, the refactor-invariant path: sort -> chunked sweep -> unsort."""
+
+    name: ClassVar[str] = "single"
+
+    def pad_multiple(self, chunk: int) -> int:
+        return chunk
+
+    def run(self, index, qpos, qid, *, k, window, chunk, max_nav, max_iters,
+            executor):
+        order, inv = _sort_unsort(index, qpos)
+        idx_s, d2_s, stats = _chunked_sweep(
+            index, qpos[order], qid[order], k=k, window=window, chunk=chunk,
+            max_nav=max_nav, max_iters=max_iters, executor=executor,
+        )
+        return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+    def describe(self) -> str:
+        return "plan=single mesh=() devices=1"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan(ExecutionPlan):
+    """Replicated index, query-sharded sweep over a 1-D ``("query",)`` mesh."""
+
+    num_devices: int
+    name: ClassVar[str] = "sharded"
+
+    def __post_init__(self):
+        if self.num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {self.num_devices}")
+
+    def pad_multiple(self, chunk: int) -> int:
+        # every device shard must be a whole number of chunks
+        return self.num_devices * chunk
+
+    def run(self, index, qpos, qid, *, k, window, chunk, max_nav, max_iters,
+            executor):
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_query_mesh(self.num_devices)
+        with use_rules(mesh, SPATIAL_RULES) as rules:
+            qpos_spec = rules.spec(("query", None))   # (Q, 2) split on axis 0
+            qvec_spec = rules.spec(("query",))        # (Q,) split
+        repl_spec = P()  # index pytree + psum'd stats: replicated
+
+        # global Morton sort: shards stay spatially coherent AND chunk
+        # boundaries coincide with the single plan's (bit-identity argument)
+        order, inv = _sort_unsort(index, qpos)
+        qpos_s, qid_s = qpos[order], qid[order]
+
+        def device_local(index, qp, qi):
+            idx_l, d2_l, st = _chunked_sweep(
+                index, qp, qi, k=k, window=window, chunk=chunk,
+                max_nav=max_nav, max_iters=max_iters, executor=executor,
+            )
+            # rebuild trigger must see the WHOLE tick's computation volume
+            st = KnnStats(*(jax.lax.psum(x, "query") for x in st))
+            return idx_l, d2_l, st
+
+        sharded = shard_map_compat(
+            device_local,
+            mesh=mesh,
+            in_specs=(repl_spec, qpos_spec, qvec_spec),
+            out_specs=(qpos_spec, qpos_spec, repl_spec),
+            axis_names={"query"},
+            check_vma=False,
+        )
+        idx_s, d2_s, stats = sharded(index, qpos_s, qid_s)
+        return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+    def describe(self) -> str:
+        return (
+            f"plan=sharded mesh=({self.num_devices},) axes=('query',) "
+            f"devices={self.num_devices}"
+        )
+
+
+# --------------------------------------------------------------------------
+# plan registry — serving/benchmarks/examples select a plan by name
+# --------------------------------------------------------------------------
+
+# name -> factory(num_devices | None) -> ExecutionPlan
+_PLANS: dict = {}
+
+
+def register_plan(name: str):
+    """Decorator: register an ExecutionPlan factory under ``name``."""
+
+    def deco(factory):
+        _PLANS[name] = factory
+        return factory
+
+    return deco
+
+
+def plan_names() -> tuple[str, ...]:
+    """Names accepted by ``resolve_plan`` / ``EngineConfig.plan``."""
+    return tuple(sorted(_PLANS))
+
+
+@register_plan("single")
+def _make_single(num_devices=None) -> SinglePlan:
+    return SinglePlan()
+
+
+@register_plan("sharded")
+def _make_sharded(num_devices=None) -> ShardedPlan:
+    n = jax.device_count() if num_devices is None else int(num_devices)
+    return ShardedPlan(num_devices=n)
+
+
+def resolve_plan(plan, *, num_devices=None) -> ExecutionPlan:
+    """Name | ExecutionPlan | None -> ExecutionPlan (default: single).
+
+    ``num_devices`` parameterizes named plans (``EngineConfig.mesh_shape``);
+    for ``sharded`` it defaults to every visible device.
+    """
+    if plan is None:
+        return SinglePlan()
+    if isinstance(plan, ExecutionPlan):
+        return plan
+    try:
+        factory = _PLANS[str(plan)]
+    except KeyError:
+        raise ValueError(
+            f"unknown execution plan {plan!r}; registered: {plan_names()}"
+        ) from None
+    return factory(num_devices)
+
+
+# --------------------------------------------------------------------------
+# jitted drivers
+# --------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "window", "chunk", "max_nav", "max_iters",
+                     "executor", "plan"),
+)
+def run_plan_device(
+    index: QuadtreeIndex,
+    qpos: jnp.ndarray,
+    qid: jnp.ndarray,
+    *,
+    k: int,
+    window: int,
+    chunk: int,
+    max_nav: int,
+    max_iters: int,
+    executor,
+    plan: ExecutionPlan,
+):
+    """Memory-bounded batch k-NN as ONE device program, laid out by ``plan``.
+
+    ``Q`` must already be a whole number of ``plan.pad_multiple(chunk)`` rows:
+    callers pad on the host (:func:`pad_queries`) so the compiled program is
+    keyed by chunk count per shard, not by the raw query count — variable
+    per-tick batch sizes reuse the same executable.
+
+    Returns (nn_idx (Q,k) i32, nn_dist (Q,k) f32 euclidean, stats) in the
+    caller's query order (padding rows come back in their input positions).
+    """
+    nq = qpos.shape[0]
+    assert nq % plan.pad_multiple(chunk) == 0, (nq, chunk, plan)
+    return plan.run(
+        index,
+        qpos.astype(jnp.float32),
+        qid.astype(jnp.int32),
+        k=k,
+        window=window,
+        chunk=chunk,
+        max_nav=max_nav,
+        max_iters=max_iters,
+        executor=executor,
+    )
+
+
+def knn_chunked_device(index, qpos, qid, *, k, window, chunk, max_nav,
+                       max_iters, executor):
+    """The single plan's sweep (kept as the PR-1 name; serving now goes
+    through :func:`run_plan_device` with an explicit plan)."""
+    return run_plan_device(
+        index, qpos, qid, k=k, window=window, chunk=chunk, max_nav=max_nav,
+        max_iters=max_iters, executor=executor, plan=SinglePlan(),
+    )
+
+
+def knn_sharded_device(index, qpos, qid, *, k, window, chunk, max_nav,
+                       max_iters, executor, num_devices):
+    """The sharded plan's sweep over ``num_devices`` mesh devices."""
+    return run_plan_device(
+        index, qpos, qid, k=k, window=window, chunk=chunk, max_nav=max_nav,
+        max_iters=max_iters, executor=executor,
+        plan=ShardedPlan(num_devices=num_devices),
+    )
+
+
+def knn_query_batch_chunked(
+    index: QuadtreeIndex,
+    qpos,
+    qid=None,
+    *,
+    k: int = 32,
+    window: int = 128,
+    chunk: int = 8192,
+    max_nav: int | None = None,
+    max_iters: int = 100_000,
+    backend=None,
+    plan=None,
+    num_devices: int | None = None,
+):
+    """Host-friendly wrapper over :func:`run_plan_device` (numpy in/out).
+
+    ``plan``/``num_devices`` select the execution plan by name (default
+    ``single``); padding and stripping are handled here, once, host-side.
+    """
+    import numpy as np
+
+    from .executor import resolve_executor
+
+    nq = qpos.shape[0]
+    if qid is None:
+        qid = np.full((nq,), -2, np.int32)
+    plan = resolve_plan(plan, num_devices=num_devices)
+    qpos_p, qid_p = pad_queries(
+        np.asarray(qpos), np.asarray(qid), plan.pad_multiple(chunk)
+    )
+    ii, dd, stats = run_plan_device(
+        index,
+        jnp.asarray(qpos_p, jnp.float32),
+        jnp.asarray(qid_p, jnp.int32),
+        k=k,
+        window=window,
+        chunk=chunk,
+        max_nav=_resolve_max_nav(index, max_nav),
+        max_iters=max_iters,
+        executor=resolve_executor(backend),
+        plan=plan,
+    )
+    return (
+        np.asarray(ii[:nq]),
+        np.asarray(dd[:nq]),
+        KnnStats(
+            iterations=int(stats.iterations),
+            candidates=float(stats.candidates),
+            leaves_visited=int(stats.leaves_visited),
+        ),
+    )

@@ -22,7 +22,11 @@ device* from the tick's candidate counter and crosses to the host as a single
 scalar together with the results.
 
 The SCAN backend is configurable per engine (``EngineConfig.backend``; see
-``repro.core.executor.available_backends``).
+``repro.core.executor.available_backends``), and so is the device layout of
+the query sweep (``EngineConfig.plan`` / ``mesh_shape``; DESIGN.md §10): the
+``sharded`` plan replicates the index across a 1-D ``("query",)`` mesh and
+splits the Morton-sorted batch with ``shard_map``, its drift statistic coming
+back ``psum``-reduced so the rebuild trigger sees the whole tick's volume.
 """
 from __future__ import annotations
 
@@ -36,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .executor import QueryExecutor, resolve_executor
-from .pipeline import default_max_nav, knn_chunked_device, pad_queries
+from .pipeline import default_max_nav
+from .plan import ExecutionPlan, pad_queries, resolve_plan
 from .quadtree import build_index, reindex_objects
 
 __all__ = ["TickEngine", "TickResult", "EngineConfig"]
@@ -52,6 +57,8 @@ class EngineConfig:
     rebuild_factor: float = 2.0  # rebuild partition when work grows by this factor
     region_pad: float = 1e-3
     backend: str = "dense_topk"  # SCAN backend (executor.available_backends())
+    plan: str = "single"  # execution plan (executor.available_plans())
+    mesh_shape: int | None = None  # devices on the ("query",) axis; None = all
     max_iters: int = 100_000
 
 
@@ -68,7 +75,8 @@ class TickResult:
 
 @partial(
     jax.jit,
-    static_argnames=("k", "window", "chunk", "max_nav", "max_iters", "executor"),
+    static_argnames=("k", "window", "chunk", "max_nav", "max_iters",
+                     "executor", "plan"),
     donate_argnums=(0,),
 )
 def _tick_step(
@@ -85,17 +93,23 @@ def _tick_step(
     max_nav: int,
     max_iters: int,
     executor: QueryExecutor,
+    plan: ExecutionPlan,
 ):
     """(index, P_tau, Q_tau) -> (index', R_tau, stats, should_rebuild).
 
-    One fused device program per tick: reindex + chunked query + drift check.
+    One fused device program per tick: reindex + the plan's query sweep +
+    drift check.  The step is built *per plan* (a static argument, like the
+    executor): under the ``single`` plan the sweep is the chunked one-device
+    ``lax.map``; under ``sharded`` it is the ``shard_map`` fan-out over the
+    ``("query",)`` mesh with the refreshed index replicated and the stats
+    ``psum``-reduced, so the drift comparison below sees whole-tick volume.
     The incoming index is donated — XLA refreshes it in place.  On ticks whose
     index was just built from these exact positions the reindex is a semantic
     no-op; running it anyway keeps ONE compiled program (a static skip flag
     would double the compile for a microseconds-scale saving).
     """
     index = reindex_objects(index, positions)
-    nn_idx, nn_dist, stats = knn_chunked_device(
+    nn_idx, nn_dist, stats = plan.run(
         index,
         qpos,
         qid,
@@ -117,6 +131,7 @@ class TickEngine:
         self.side = float(side)
         self.index = None
         self.executor = resolve_executor(cfg.backend)
+        self.plan = resolve_plan(cfg.plan, num_devices=cfg.mesh_shape)
         self._work_at_build: float | None = None
         self.tick = 0
         self.history: list[TickResult] = []
@@ -143,8 +158,13 @@ class TickEngine:
         nq = qpos.shape[0]
         if qid is None:
             qid = np.full((nq,), -2, np.int32)
-        # host-side pad: the compiled step is keyed by chunk count, not nq
-        qpos_p, qid_p = pad_queries(np.asarray(qpos), np.asarray(qid), self.cfg.chunk)
+        # host-side pad, once, to the plan's granularity (num_devices * chunk
+        # for the sharded plan): the compiled step is keyed by chunk count per
+        # shard, not nq; padding rows are stripped after the gather via [:nq]
+        qpos_p, qid_p = pad_queries(
+            np.asarray(qpos), np.asarray(qid),
+            self.plan.pad_multiple(self.cfg.chunk),
+        )
         # the whole tick is one jitted call; host reads results + one bool back
         self.index, nn_idx, nn_dist, stats, should_rebuild = _tick_step(
             self.index,
@@ -159,6 +179,7 @@ class TickEngine:
             max_nav=default_max_nav(self.cfg.l_max),
             max_iters=self.cfg.max_iters,
             executor=self.executor,
+            plan=self.plan,
         )
         work = float(stats.candidates)
         if self._work_at_build is None:

@@ -11,18 +11,22 @@ import jax
 
 from .sharding import (
     DEFAULT_RULES,
+    SPATIAL_RULES,
     LogicalRules,
     current_rules,
     logical_to_spec,
+    shard_map_compat,
     use_rules,
 )
 
 __all__ = [
     "DEFAULT_RULES",
+    "SPATIAL_RULES",
     "LogicalRules",
     "constrain",
     "current_rules",
     "logical_to_spec",
+    "shard_map_compat",
     "use_rules",
 ]
 

@@ -26,9 +26,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = [
     "DEFAULT_RULES",
+    "SPATIAL_RULES",
     "LogicalRules",
     "current_rules",
     "logical_to_spec",
+    "shard_map_compat",
     "use_rules",
 ]
 
@@ -51,6 +53,19 @@ DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
     "expert": "model",
     "expert_cap": "model",
     "conv": None,
+}
+
+# Spatial logical axes for the k-NN serving path (DESIGN.md §10).  The tick
+# mesh is 1-D ``("query",)``: the Morton-sorted query batch splits across
+# devices, while objects and cells stay replicated — every device holds the
+# whole quadtree (positions + count pyramid), so per-query results need no
+# cross-device candidate exchange.  "object"/"cell" are reserved for the
+# object-sharded plan (deferred: cross-shard NAV; the merge primitive in
+# kernels/merge_topk.py is its reduction step).
+SPATIAL_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "query": "query",
+    "object": None,
+    "cell": None,
 }
 
 
@@ -113,3 +128,29 @@ def logical_to_spec(logical_axes, shape=None) -> P:
     lr = current_rules()
     assert lr is not None, "logical_to_spec requires an active use_rules(mesh) scope"
     return lr.spec(logical_axes, shape)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names, check_vma):
+    """``jax.shard_map`` across jax versions (shared by train and serving).
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=, check_vma=)``.  0.4.x
+    only has ``jax.experimental.shard_map.shard_map`` whose partial-auto mode
+    (``auto=``) hard-crashes the bundled XLA on collectives over the manual
+    axis (``Check failed: IsManualSubgroup``), so there we fall back to a
+    FULLY manual map: same semantics — values are only ever split on the
+    manual axes, everything else enters replicated — minus the intra-region
+    GSPMD resharding, which is a performance hint, not a correctness
+    requirement.
+    """
+    import jax
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

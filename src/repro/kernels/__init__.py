@@ -1,31 +1,46 @@
 """Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
 
 Layout per the repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
-BlockSpec kernel, ``ops.py`` the jit'd wrappers + the SCAN backend registry,
-``ref.py`` the pure-jnp oracles used by the allclose sweeps in tests/.
+BlockSpec kernel, ``ops.py`` the jit'd wrappers + the SCAN/MERGE backend
+registries, ``ref.py`` the pure-jnp oracles used by the allclose sweeps in
+tests/.
 """
 from .ops import (
     bucket_kselect_op,
     fused_scan_merge_op,
+    get_merge_backend,
     get_scan_backend,
+    merge_backend_names,
+    merge_topk_lists_op,
     pairwise_dist_op,
+    register_merge_backend,
     register_scan_backend,
     scan_backend_names,
     topk_select_op,
 )
-from .ref import bucket_kselect_ref, pairwise_dist_ref, topk_select_ref
+from .ref import (
+    bucket_kselect_ref,
+    merge_topk_lists_ref,
+    pairwise_dist_ref,
+    topk_select_ref,
+)
 from .runtime import default_interpret
 
 __all__ = [
     "bucket_kselect_op",
     "fused_scan_merge_op",
+    "merge_topk_lists_op",
     "pairwise_dist_op",
     "topk_select_op",
     "bucket_kselect_ref",
+    "merge_topk_lists_ref",
     "pairwise_dist_ref",
     "topk_select_ref",
     "default_interpret",
     "get_scan_backend",
     "register_scan_backend",
     "scan_backend_names",
+    "get_merge_backend",
+    "register_merge_backend",
+    "merge_backend_names",
 ]

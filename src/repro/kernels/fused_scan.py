@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .refine import bucket_refine_step
+from .refine import bucket_refine_step, masked_argmin_rounds
 from .runtime import default_interpret
 
 __all__ = ["fused_scan_merge", "Q_TILE"]
@@ -75,26 +75,7 @@ def _make_kernel(k: int, w: int, num_bins: int, iters: int):
         d_sel = jnp.where(all_d < radius[:, None], all_d, big)
 
         # --- pillar 2: ascending materialization by masked argmin rounds.
-        col = jax.lax.broadcasted_iota(jnp.int32, (Q_TILE, k + w), 1)
-
-        def take(j, state):
-            d, out_d, out_i = state
-            m = jnp.argmin(d, axis=1)
-            mval = jnp.min(d, axis=1)
-            hit = col == m[:, None]
-            out_d = out_d.at[:, j].set(mval)
-            out_i = out_i.at[:, j].set(
-                jnp.where(
-                    jnp.isinf(mval),
-                    -1,
-                    jnp.take_along_axis(all_i, m[:, None], 1)[:, 0],
-                )
-            )
-            return jnp.where(hit, big, d), out_d, out_i
-
-        out_d = jnp.zeros((Q_TILE, k), jnp.float32)
-        out_i = jnp.zeros((Q_TILE, k), jnp.int32)
-        _, out_d, out_i = jax.lax.fori_loop(0, k, take, (d_sel, out_d, out_i))
+        out_d, out_i = masked_argmin_rounds(d_sel, all_i, k)
         out_d_ref[:, :] = out_d
         out_i_ref[:, :] = out_i
 

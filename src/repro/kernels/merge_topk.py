@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: merge two ascending (dist, id) result lists per row.
+
+The reduction operator of the sharded execution plans (DESIGN.md §10): given
+two partial k-NN result lists per query — each ascending, ``+inf``/``-1``
+padded, produced against *disjoint* candidate subsets — emit the k smallest of
+the union, ascending, with the same tie-resolution contract as the SCAN
+backends (ties at the k-th distance resolved arbitrarily).  This is what makes
+per-partition k-NN composable: ``knn(P_a ∪ P_b) = merge(knn(P_a), knn(P_b))``,
+the per-partition merge of Gowanlock's hybrid KNN-join, and the future
+object-sharded plan's cross-device reduction step.
+
+Implementation mirrors ``topk_select``: the concatenated (T, ka+kb) row lives
+in VMEM and is materialized by k masked argmin rounds — for list-sized inputs
+(ka, kb ~ k) this is a tiny tile, and the ascending property lets the wrapper
+pre-slice each input to its first k columns before dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .refine import masked_argmin_rounds
+from .runtime import default_interpret
+
+__all__ = ["merge_topk_lists", "Q_TILE"]
+
+Q_TILE = 8
+
+
+def _make_kernel(k: int, ca: int, cb: int):
+    def kernel(da_ref, ia_ref, db_ref, ib_ref, out_d_ref, out_i_ref):
+        d = jnp.concatenate([da_ref[:, :], db_ref[:, :]], axis=1)  # (T, ca+cb)
+        ids = jnp.concatenate([ia_ref[:, :], ib_ref[:, :]], axis=1)
+        out_d, out_i = masked_argmin_rounds(d.astype(jnp.float32), ids, k)
+        out_d_ref[:, :] = out_d
+        out_i_ref[:, :] = out_i
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def merge_topk_lists(d_a, i_a, d_b, i_b, *, k: int, interpret: bool | None = None):
+    """(Q, ka)+(Q, kb) ascending lists -> (Q, k) merged ascending list.
+
+    Q must be a multiple of Q_TILE (``ops.merge_topk_lists_op`` pads).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    q, ca = d_a.shape
+    cb = d_b.shape[1]
+    assert q % Q_TILE == 0, q
+    grid = (q // Q_TILE,)
+    row = lambda i: (i, 0)
+    out_d, out_i = pl.pallas_call(
+        _make_kernel(k, ca, cb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_TILE, ca), row),
+            pl.BlockSpec((Q_TILE, ca), row),
+            pl.BlockSpec((Q_TILE, cb), row),
+            pl.BlockSpec((Q_TILE, cb), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q_TILE, k), row),
+            pl.BlockSpec((Q_TILE, k), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d_a, i_a, d_b, i_b)
+    return out_d, out_i

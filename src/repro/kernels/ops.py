@@ -31,17 +31,23 @@ import numpy as np
 
 from . import bucket_kselect as _bk
 from . import fused_scan as _fs
+from . import merge_topk as _mt
 from . import pairwise_dist as _pd
 from . import topk_select as _tk
+from .ref import merge_topk_lists_ref
 
 __all__ = [
     "pairwise_dist_op",
     "bucket_kselect_op",
     "topk_select_op",
     "fused_scan_merge_op",
+    "merge_topk_lists_op",
     "register_scan_backend",
     "get_scan_backend",
     "scan_backend_names",
+    "register_merge_backend",
+    "get_merge_backend",
+    "merge_backend_names",
 ]
 
 
@@ -134,6 +140,29 @@ def fused_scan_merge_op(
     return out_d[:q], out_i[:q]
 
 
+def merge_topk_lists_op(
+    d_a, i_a, d_b, i_b, *, k: int, interpret: bool | None = None
+):
+    """Pad-and-dispatch wrapper for :func:`repro.kernels.merge_topk.merge_topk_lists`.
+
+    Two ascending +inf/-1-padded lists per row, (Q, ka) and (Q, kb), -> the k
+    smallest of the union, ascending (DESIGN.md §10 merge contract).  Because
+    the inputs are ascending, only the first k columns of each can reach the
+    output — they are sliced off before dispatch so the kernel tile is at most
+    (Q_TILE, 2k).
+    """
+    q = d_a.shape[0]
+    d_a, i_a = d_a[:, :k], i_a[:, :k]
+    d_b, i_b = d_b[:, :k], i_b[:, :k]
+    qp = int(np.ceil(max(q, 1) / _mt.Q_TILE)) * _mt.Q_TILE
+    da = _pad_to(d_a.astype(jnp.float32), qp, jnp.inf)
+    ia = _pad_to(i_a.astype(jnp.int32), qp, -1)
+    db = _pad_to(d_b.astype(jnp.float32), qp, jnp.inf)
+    ib = _pad_to(i_b.astype(jnp.int32), qp, -1)
+    out_d, out_i = _mt.merge_topk_lists(da, ia, db, ib, k=k, interpret=interpret)
+    return out_d[:q], out_i[:q]
+
+
 # --------------------------------------------------------------------------
 # SCAN backend registry
 # --------------------------------------------------------------------------
@@ -201,3 +230,49 @@ def _brute_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
     out_d = jnp.take_along_axis(all_d, order[:, :k], axis=1)
     out_i = jnp.take_along_axis(all_i, order[:, :k], axis=1)
     return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+
+
+# --------------------------------------------------------------------------
+# MERGE backend registry — the reduction step of sharded plans (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+# merge(d_a, i_a, d_b, i_b, k) -> (d, i): k smallest of the union of two
+# ascending +inf/-1-padded lists, ascending, same tie contract as SCAN.
+MergeListsFn = Callable[..., tuple]
+
+_MERGE_BACKENDS: dict[str, MergeListsFn] = {}
+
+
+def register_merge_backend(name: str):
+    """Decorator: register a result-list merge strategy under ``name``."""
+
+    def deco(fn: MergeListsFn) -> MergeListsFn:
+        _MERGE_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_merge_backend(name: str) -> MergeListsFn:
+    try:
+        return _MERGE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown merge backend {name!r}; registered: {merge_backend_names()}"
+        ) from None
+
+
+def merge_backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_MERGE_BACKENDS))
+
+
+@register_merge_backend("dense_merge")
+def _dense_merge_lists(d_a, i_a, d_b, i_b, k: int):
+    """XLA ``lax.top_k`` over the concatenated row (jnp mirror of the kernel)."""
+    return merge_topk_lists_ref(d_a, i_a, d_b, i_b, k=k)
+
+
+@register_merge_backend("fused_merge")
+def _fused_merge_lists(d_a, i_a, d_b, i_b, k: int):
+    """Pallas kernel; auto-interprets off-TPU (runtime.default_interpret)."""
+    return merge_topk_lists_op(d_a, i_a, d_b, i_b, k=k)

@@ -8,7 +8,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["pairwise_dist_ref", "bucket_kselect_ref", "topk_select_ref"]
+__all__ = [
+    "pairwise_dist_ref",
+    "bucket_kselect_ref",
+    "topk_select_ref",
+    "merge_topk_lists_ref",
+]
 
 
 def pairwise_dist_ref(qx, qy, px, py, valid):
@@ -74,3 +79,16 @@ def topk_select_ref(d2, ids, *, k: int):
     out_i = jnp.take_along_axis(ids, sel, axis=1)
     out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
     return out_d, out_i
+
+
+def merge_topk_lists_ref(d_a, i_a, d_b, i_b, *, k: int):
+    """Merge two ascending per-row (dist, id) lists -> k smallest of the union.
+
+    The reduction operator of the sharded plans (DESIGN.md §10): both inputs
+    ascending and +inf/-1 padded, output likewise; k-th-distance ties resolved
+    arbitrarily — identical contract to the SCAN backends, so per-partition
+    partial results compose: ``knn(A ∪ B) = merge(knn(A), knn(B))``.
+    """
+    all_d = jnp.concatenate([d_a, d_b], axis=1)
+    all_i = jnp.concatenate([i_a, i_b], axis=1)
+    return topk_select_ref(all_d, all_i, k=k)

@@ -1,16 +1,54 @@
-"""One guarded bucket-refinement round, shared by the Pallas kernel bodies.
+"""Selection-round helpers shared by the Pallas kernel bodies.
 
-Factored out of ``bucket_kselect`` and ``fused_scan`` so the Alabi refinement
-(including the float-edge guard, DESIGN.md §4) has a single kernel-side
-spelling.  The jnp oracles (``kernels/ref.py``, ``core/kselect.py``) keep
-independent mirrors on purpose — they are the correctness contracts the
-allclose sweeps compare the kernels against.
+Factored out of the individual kernels so each contract has a single
+kernel-side spelling: ``bucket_refine_step`` (the Alabi refinement round with
+its float-edge guard, DESIGN.md §4 — from ``bucket_kselect``/``fused_scan``)
+and ``masked_argmin_rounds`` (the ascending top-k materialization with the
+inf→-1 id padding rule — from ``topk_select``/``fused_scan``/``merge_topk``).
+The jnp oracles (``kernels/ref.py``, ``core/kselect.py``) keep independent
+mirrors on purpose — they are the correctness contracts the allclose sweeps
+compare the kernels against.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["bucket_refine_step"]
+__all__ = ["bucket_refine_step", "masked_argmin_rounds"]
+
+
+def masked_argmin_rounds(d, ids, k: int):
+    """k rounds of masked row-argmin: (T, C) dists + ids -> ascending (T, k).
+
+    The kernel-side top-k materialization (paper Fig. 1 linear layout): each
+    round extracts the row minimum, records (dist, id) — +inf slots pad with
+    id -1 — and masks the hit.  ``d`` must have invalid entries pre-masked to
+    +inf; ties resolve to the lowest column (``argmin``), which is the
+    arbitrary-tie freedom of the selection contract.
+    """
+    t, c = d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    big = jnp.asarray(jnp.inf, jnp.float32)
+
+    def body(j, state):
+        dd, out_d, out_i = state
+        m = jnp.argmin(dd, axis=1)  # (T,)
+        mval = jnp.min(dd, axis=1)
+        hit = col == m[:, None]
+        out_d = out_d.at[:, j].set(mval)
+        out_i = out_i.at[:, j].set(
+            jnp.where(
+                jnp.isinf(mval),
+                -1,
+                jnp.take_along_axis(ids, m[:, None], 1)[:, 0],
+            )
+        )
+        return jnp.where(hit, big, dd), out_d, out_i
+
+    out_d = jnp.zeros((t, k), jnp.float32)
+    out_i = jnp.zeros((t, k), jnp.int32)
+    _, out_d, out_i = jax.lax.fori_loop(0, k, body, (d, out_d, out_i))
+    return out_d, out_i
 
 
 def bucket_refine_step(d2, lo, hi, kth, num_bins: int):

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .refine import masked_argmin_rounds
 from .runtime import default_interpret
 
 __all__ = ["topk_select", "Q_TILE"]
@@ -28,25 +29,9 @@ Q_TILE = 8
 
 def _make_kernel(k: int, c: int):
     def kernel(d2_ref, ids_ref, out_d_ref, out_i_ref):
-        d2 = d2_ref[:, :].astype(jnp.float32)
-        ids = ids_ref[:, :]
-        col = jax.lax.broadcasted_iota(jnp.int32, (Q_TILE, c), 1)
-        big = jnp.asarray(jnp.inf, jnp.float32)
-
-        def body(j, state):
-            d, out_d, out_i = state
-            m = jnp.argmin(d, axis=1)  # (Q,)
-            mval = jnp.min(d, axis=1)
-            hit = col == m[:, None]
-            out_d = out_d.at[:, j].set(mval)
-            out_i = out_i.at[:, j].set(
-                jnp.where(jnp.isinf(mval), -1, jnp.take_along_axis(ids, m[:, None], 1)[:, 0])
-            )
-            return jnp.where(hit, big, d), out_d, out_i
-
-        out_d = jnp.zeros((Q_TILE, k), jnp.float32)
-        out_i = jnp.zeros((Q_TILE, k), jnp.int32)
-        _, out_d, out_i = jax.lax.fori_loop(0, k, body, (d2, out_d, out_i))
+        out_d, out_i = masked_argmin_rounds(
+            d2_ref[:, :].astype(jnp.float32), ids_ref[:, :], k
+        )
         out_d_ref[:, :] = out_d
         out_i_ref[:, :] = out_i
 

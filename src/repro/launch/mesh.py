@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_query_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +21,20 @@ def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_query_mesh(num_devices: int | None = None):
+    """The 1-D ``("query",)`` tick-serving mesh (DESIGN.md §10).
+
+    The sharded ExecutionPlan splits the Morton-sorted query batch along this
+    single axis; ``num_devices=None`` takes every visible device.  On CPU run
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get a
+    multi-device mesh without accelerators.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"requested {n} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("query",))

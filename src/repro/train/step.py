@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist import shard_map_compat
 from repro.models import loss_fn
 from repro.train.compression import crosspod_mean, crosspod_mean_int8
 from repro.train.optimizer import OptConfig, adamw_update, clip_by_global_norm
@@ -27,31 +28,8 @@ __all__ = [
     "make_train_step",
     "make_train_step_crosspod",
     "grads_and_loss",
-    "shard_map_compat",
+    "shard_map_compat",  # rehomed to repro.dist.sharding (serving uses it too)
 ]
-
-
-def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names, check_vma):
-    """``jax.shard_map`` across jax versions.
-
-    Newer jax exposes ``jax.shard_map(..., axis_names=, check_vma=)``.  0.4.x
-    only has ``jax.experimental.shard_map.shard_map`` whose partial-auto mode
-    (``auto=``) hard-crashes the bundled XLA on collectives over the manual
-    axis (``Check failed: IsManualSubgroup``), so there we fall back to a
-    FULLY manual map: same semantics — batch is only ever split on the manual
-    axes, params/opt enter replicated — minus the intra-pod GSPMD resharding,
-    which is a performance hint, not a correctness requirement.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=axis_names, check_vma=check_vma,
-        )
-    from jax.experimental.shard_map import shard_map as _sm
-
-    return _sm(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
-    )
 
 
 def grads_and_loss(params, cfg: ModelConfig, batch, accum: int = 1):

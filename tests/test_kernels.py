@@ -6,6 +6,9 @@ import pytest
 from repro.kernels import (
     bucket_kselect_op,
     bucket_kselect_ref,
+    merge_backend_names,
+    get_merge_backend,
+    merge_topk_lists_ref,
     pairwise_dist_op,
     pairwise_dist_ref,
     topk_select_op,
@@ -70,3 +73,55 @@ def test_topk_select_with_infs():
     out_d, out_i = topk_select_op(d2, ids, k=3)
     assert list(np.asarray(out_i)[0][:2]) == [12, 10]
     assert int(np.asarray(out_i)[0][2]) == -1  # inf slot -> padded id
+
+
+def _ascending_lists(q, width, k, seed, lo=0.0, hi=100.0, id_base=0):
+    """Random ascending +inf/-1-padded (dist, id) lists, ragged fill per row."""
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(0, width + 1, size=q)
+    d = np.full((q, width), np.inf, np.float32)
+    i = np.full((q, width), -1, np.int32)
+    for r in range(q):
+        vals = np.sort(rng.uniform(lo, hi, n_real[r])).astype(np.float32)
+        d[r, : n_real[r]] = vals
+        i[r, : n_real[r]] = id_base + rng.choice(10_000, n_real[r], replace=False)
+    return jnp.asarray(d), jnp.asarray(i)
+
+
+@pytest.mark.parametrize("backend", merge_backend_names())
+@pytest.mark.parametrize("q,ka,kb,k", [(1, 4, 4, 4), (9, 8, 3, 8), (32, 16, 16, 8)])
+def test_merge_topk_lists_backends(backend, q, ka, kb, k):
+    """Every merge backend == the jnp oracle: distances exact per rank, ids
+    equal off ties, +inf rows padded with -1 (DESIGN.md §10 contract)."""
+    d_a, i_a = _ascending_lists(q, ka, k, seed=q + ka)
+    d_b, i_b = _ascending_lists(q, kb, k, seed=q + kb + 1, id_base=20_000)
+    got_d, got_i = get_merge_backend(backend)(d_a, i_a, d_b, i_b, k)
+    want_d, want_i = merge_topk_lists_ref(d_a, i_a, d_b, i_b, k=k)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-6)
+    got_i, want_i = np.asarray(got_i), np.asarray(want_i)
+    ties = np.asarray(want_d)[:, :, None] == np.asarray(want_d)[:, None, :]
+    unique = ties.sum(axis=2)[np.isfinite(np.asarray(want_d))] == 1
+    np.testing.assert_array_equal(
+        got_i[np.isfinite(np.asarray(got_d))][unique],
+        want_i[np.isfinite(np.asarray(want_d))][unique],
+    )
+    assert (got_i[np.isinf(np.asarray(got_d))] == -1).all()
+
+
+@pytest.mark.parametrize("backend", merge_backend_names())
+def test_merge_composes_partitioned_knn(backend):
+    """The object-sharding composition law the primitive exists for:
+    ``knn(P_a ∪ P_b) = merge(knn(P_a), knn(P_b))`` per query row."""
+    rng = np.random.default_rng(23)
+    pts = rng.uniform(0, 1000, (200, 2)).astype(np.float32)
+    qpos = rng.uniform(0, 1000, (24, 2)).astype(np.float32)
+    k = 6
+    d2 = np.square(qpos[:, None, :] - pts[None, :, :]).sum(-1)
+    ids = np.tile(np.arange(200, dtype=np.int32), (24, 1))
+    half = 100
+    da, ia = topk_select_ref(jnp.asarray(d2[:, :half]), jnp.asarray(ids[:, :half]), k=k)
+    db, ib = topk_select_ref(jnp.asarray(d2[:, half:]), jnp.asarray(ids[:, half:]), k=k)
+    full_d, full_i = topk_select_ref(jnp.asarray(d2), jnp.asarray(ids), k=k)
+    got_d, got_i = get_merge_backend(backend)(da, ia, db, ib, k)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(full_d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(full_i))

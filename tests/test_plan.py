@@ -1,0 +1,224 @@
+"""ExecutionPlan seam: sharded == single bit-for-bit, padding, registry.
+
+The acceptance contract of the mesh-sharded refactor (DESIGN.md §10): the
+``sharded`` plan — replicated index, ``shard_map`` query shards, concatenating
+gather — must produce **bit-identical** ids and distances to the ``single``
+plan on the same inputs, because every shard boundary coincides with a chunk
+boundary of the single plan's sweep.  Runs on however many devices exist
+(CI runs the suite twice: 1 real CPU device and 8 forced host devices); the
+subprocess test additionally pins an 8-device mesh regardless of the outer
+environment.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    ShardedPlan,
+    SinglePlan,
+    TickEngine,
+    available_plans,
+    build_index,
+    knn_bruteforce_chunked,
+    knn_query_batch_chunked,
+    resolve_plan,
+)
+from repro.data import make_workload
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+NDEV = jax.device_count()
+
+
+# ------------------------------------------------------------------ registry
+
+def test_plan_registry_names():
+    assert set(available_plans()) == {"single", "sharded"}
+
+
+def test_unknown_plan_rejected():
+    with pytest.raises(ValueError, match="unknown execution plan"):
+        resolve_plan("nope")
+
+
+def test_resolve_plan_defaults():
+    assert resolve_plan(None) == SinglePlan()
+    assert resolve_plan("single") == SinglePlan()
+    p = resolve_plan("sharded")
+    assert isinstance(p, ShardedPlan) and p.num_devices == NDEV
+    assert resolve_plan("sharded", num_devices=1) == ShardedPlan(num_devices=1)
+    assert resolve_plan(p) is p
+
+
+def test_sharded_plan_rejects_bad_device_counts():
+    with pytest.raises(ValueError):
+        ShardedPlan(num_devices=0)
+    with pytest.raises(ValueError, match="devices"):
+        # plan constructs, the mesh (built at trace time) rejects the overask
+        knn_query_batch_chunked(
+            _tiny_index(), np.zeros((4, 2), np.float32), None,
+            k=2, chunk=4, plan="sharded", num_devices=NDEV + 1,
+        )
+
+
+def _tiny_index():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1000, (32, 2)).astype(np.float32)
+    return build_index(jnp.asarray(pts), jnp.zeros(2), 1000.0, l_max=4, th_quad=8)
+
+
+# ------------------------------------------------- determinism across plans
+
+def _both_plans(pts, qpos, qid, *, k, chunk, num_devices):
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22_500.0, l_max=6, th_quad=24)
+    a_i, a_d, _ = knn_query_batch_chunked(
+        idx, qpos, qid, k=k, window=32, chunk=chunk, plan="single"
+    )
+    b_i, b_d, _ = knn_query_batch_chunked(
+        idx, qpos, qid, k=k, window=32, chunk=chunk,
+        plan="sharded", num_devices=num_devices,
+    )
+    return (a_i, a_d), (b_i, b_d)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "gaussian", "network"])
+def test_sharded_bit_identical_to_single(dist):
+    """All three workload families: ids AND distances bit-for-bit equal."""
+    w = make_workload(700, dist, seed=5)
+    pts = w.positions()
+    qpos, qid = w.query_batch()
+    (a_i, a_d), (b_i, b_d) = _both_plans(
+        pts, qpos, qid, k=8, chunk=64, num_devices=NDEV
+    )
+    np.testing.assert_array_equal(a_i, b_i)
+    np.testing.assert_array_equal(a_d, b_d)
+
+
+def test_sharded_bit_identical_duplicate_ties_and_padding():
+    """Duplicate positions (massed distance ties) and n < k inf/-1 padding
+    must resolve identically across plans — same per-query op sequence."""
+    rng = np.random.default_rng(8)
+    base = rng.uniform(0, 22_500, (40, 2)).astype(np.float32)
+    pts = np.repeat(base, 4, axis=0)  # every position 4 times -> ties
+    rng.shuffle(pts)
+    qid = np.arange(len(pts), dtype=np.int32)
+    (a_i, a_d), (b_i, b_d) = _both_plans(
+        pts, pts, qid, k=6, chunk=32, num_devices=NDEV
+    )
+    np.testing.assert_array_equal(a_i, b_i)
+    np.testing.assert_array_equal(a_d, b_d)
+    # n < k: padding rows identical too
+    small = rng.uniform(0, 22_500, (3, 2)).astype(np.float32)
+    (a_i, a_d), (b_i, b_d) = _both_plans(
+        small, small, np.arange(3, dtype=np.int32), k=8, chunk=16,
+        num_devices=NDEV,
+    )
+    np.testing.assert_array_equal(a_i, b_i)
+    np.testing.assert_array_equal(a_d, b_d)
+    assert (a_i[:, 2:] == -1).all() and np.isinf(a_d[:, 2:]).all()
+
+
+# ------------------------------------------------------- padding regression
+
+@pytest.mark.parametrize("nq", [1, None])  # None -> num_devices * chunk - 1
+def test_sharded_pad_strip_regression(nq):
+    """A batch not divisible by num_devices * chunk pads once host-side and
+    strips after the gather: Q=1 and Q=num_devices*chunk-1 (the two worst
+    cases: maximal padding, and one-row-short of no padding)."""
+    chunk = 32
+    nq = NDEV * chunk - 1 if nq is None else nq
+    rng = np.random.default_rng(nq)
+    pts = rng.uniform(0, 22_500, (500, 2)).astype(np.float32)
+    qpos = rng.uniform(0, 22_500, (nq, 2)).astype(np.float32)
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22_500.0, l_max=5, th_quad=16)
+    ii, dd, _ = knn_query_batch_chunked(
+        idx, qpos, None, k=4, window=32, chunk=chunk,
+        plan="sharded", num_devices=NDEV,
+    )
+    assert ii.shape == (nq, 4) and dd.shape == (nq, 4)
+    bi, bd = knn_bruteforce_chunked(
+        pts, qpos, np.full((nq,), -2, np.int32), k=4, chunk=max(nq, 1)
+    )
+    np.testing.assert_allclose(dd, bd, rtol=1e-5, atol=1e-3)
+
+
+def test_engine_sharded_pad_strip_q1():
+    """The engine path: a single query through the sharded tick step."""
+    w = make_workload(400, "uniform", seed=9)
+    eng = TickEngine(
+        EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=32,
+                     plan="sharded", mesh_shape=NDEV)
+    )
+    qpos = w.positions()[:1]
+    res = eng.process_tick(w.positions(), qpos, np.array([0], np.int32))
+    assert res.nn_idx.shape == (1, 4)
+    bi, bd = knn_bruteforce_chunked(
+        w.positions(), qpos, np.array([0], np.int32), k=4, chunk=32
+    )
+    np.testing.assert_allclose(res.nn_dist, bd, rtol=1e-5, atol=1e-3)
+
+
+# ------------------------------------------------------ engine plan parity
+
+def test_engine_plan_parity_over_ticks():
+    """TickEngine under plan=sharded == plan=single, tick for tick, bitwise."""
+    def run(plan):
+        eng = TickEngine(
+            EngineConfig(k=6, th_quad=16, l_max=5, window=32, chunk=64,
+                         plan=plan, mesh_shape=NDEV if plan == "sharded" else None)
+        )
+        w = make_workload(600, "gaussian", seed=2, hotspots=4)
+        return eng.run(w, ticks=3)
+
+    single, sharded = run("single"), run("sharded")
+    for rs, rh in zip(single, sharded):
+        np.testing.assert_array_equal(rs.nn_idx, rh.nn_idx)
+        np.testing.assert_array_equal(rs.nn_dist, rh.nn_dist)
+        assert rs.rebuilt == rh.rebuilt
+
+
+# -------------------------------------------- forced 8-device mesh (real XLA)
+
+def test_sharded_determinism_on_forced_8_device_mesh():
+    """The acceptance criterion on real multi-device XLA: an 8-device CPU mesh
+    (forced host devices) produces bit-identical results to the single plan on
+    all three workload families, engine path included.
+
+    Runs in a subprocess because the device count must be set before jax init.
+    """
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 8, jax.device_count()
+from repro.core import EngineConfig, TickEngine, build_index, knn_query_batch_chunked
+from repro.data import make_workload
+
+for dist in ("uniform", "gaussian", "network"):
+    w = make_workload(500, dist, seed=5)
+    pts = w.positions(); qpos, qid = w.query_batch()
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=5, th_quad=24)
+    a_i, a_d, _ = knn_query_batch_chunked(idx, qpos, qid, k=6, window=32, chunk=32, plan="single")
+    b_i, b_d, _ = knn_query_batch_chunked(idx, qpos, qid, k=6, window=32, chunk=32, plan="sharded", num_devices=8)
+    np.testing.assert_array_equal(a_i, b_i)
+    np.testing.assert_array_equal(a_d, b_d)
+
+eng = TickEngine(EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=32, plan="sharded", mesh_shape=8))
+w = make_workload(400, "gaussian", seed=3, hotspots=3)
+res = eng.run(w, ticks=2)
+assert res[0].nn_dist.shape == (400, 4)
+assert np.isfinite(res[1].nn_dist).all()
+print("SHARDED_8DEV_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)  # the child pins its own device count
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "SHARDED_8DEV_OK" in r.stdout
