@@ -4,8 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Each sub-bench is importable and
 has a __main__ for full-size runs; this runner uses CPU-feasible defaults.
 
 ``--smoke`` runs a minutes-scale subset and writes ``BENCH_smoke.json``
-(queries/s + candidates/s per backend, engine tick latency) — the per-PR perf
-trajectory artifact consumed by CI.
+(queries/s + candidates/s per backend, engine tick latency, serving-mode
+rows) plus ``BENCH_serving.json`` (snapshot vs delta ingest x blocking vs
+overlapped submit, s6) — the per-PR perf trajectory artifacts consumed by CI.
 """
 from __future__ import annotations
 
@@ -52,6 +53,17 @@ def _smoke(out_path: str) -> None:
     ticks = {b: engine_row(b, "single") for b in available_backends()}
     rec["engine"] = ticks
     rec["engine_sharded"] = engine_row("dense_topk", "sharded")
+
+    # serving-mode sweep (session API): snapshot vs delta x blocking vs
+    # overlapped, reduced size.  Written under a _smoke name: the plain
+    # BENCH_serving.json is the committed full-size (50K x 30) artifact and
+    # must not be clobbered by smoke runs.
+    from benchmarks import s6_serving
+
+    rec["serving"] = s6_serving.run(
+        objects=4_000, ticks=4, k=16, chunk=1024, window=128,
+        out="BENCH_serving_smoke.json",
+    )
     rec["timestamp"] = time.time()
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -83,6 +95,7 @@ def main() -> None:
         s3_vs_cpu,
         s4_backends,
         s5_scaling,
+        s6_serving,
     )
 
     s1_treeheight.run(n_objects=30_000, ks=(8, 32), th_quads=(48, 384, 1536))
@@ -94,6 +107,10 @@ def main() -> None:
     s3_vary_k.run_update_strategies(q=64, c=512, ks=(32,))
     s4_backends.run(n_objects=20_000, k=32, out="BENCH_backends.json")
     s5_scaling.run(objects=8_000, ticks=4, out="BENCH_scaling.json")
+    # full scale matches the committed artifact (50K objects x 30 ticks) so a
+    # full run regenerates BENCH_serving.json at its documented size
+    s6_serving.run(objects=50_000, queries=16_384, ticks=30,
+                   out="BENCH_serving.json")
     kernels.run(q=64, c=512, k=16)
 
     # roofline summary (optimized defaults if recorded, else baseline)

@@ -2,12 +2,18 @@
 
 30 ticks (as in the paper's evaluation) of 50K moving objects, one k-NN query
 per object per tick, timeslice semantics, index reuse + drift-triggered
-rebuild.  This is the deployable TickEngine service loop, on either execution
-plan: ``single`` (one device) or ``sharded`` (the 1-D ``("query",)`` mesh,
-DESIGN.md §10).
+rebuild — through the **session API** (``repro.api``, DESIGN.md §11): a
+``KnnSession`` built from a declarative ``ServiceSpec`` owns device-resident
+object and query state; queries are registered ONCE and moved in place,
+object motion streams in as delta scatters (``--ingest delta``) or full
+snapshots (``--ingest snapshot``), and ``--overlap`` submits tick τ+1 while
+τ's results are still in flight (the paper's CPU/GPU pipeline overlap).
+Runs on either execution plan: ``single`` (one device) or ``sharded`` (the
+1-D ``("query",)`` mesh, DESIGN.md §10).
 
   PYTHONPATH=src python examples/moving_objects_service.py \
-      [--objects N] [--ticks T] [--plan single|sharded] [--devices D]
+      [--objects N] [--ticks T] [--plan single|sharded] [--devices D] \
+      [--ingest snapshot|delta] [--overlap]
 
 ``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
 initializes, so the sharded plan runs on a real D-device mesh without
@@ -16,6 +22,7 @@ accelerators.
 import argparse
 import os
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
@@ -29,12 +36,23 @@ def _parse_args():
     ap.add_argument("--distribution", default="gaussian",
                     choices=["uniform", "gaussian", "network"])
     ap.add_argument("--backend", default="dense_topk",
-                    help="SCAN-step selection backend (executor registry)")
+                    help="SCAN-step selection backend (validated eagerly by "
+                         "ServiceSpec against the executor registry)")
     ap.add_argument("--plan", default="single", choices=["single", "sharded"],
                     help="execution plan (plan registry)")
     ap.add_argument("--devices", type=int, default=None,
                     help="mesh size on the ('query',) axis; on CPU also "
                          "forces that many host devices (set before jax init)")
+    ap.add_argument("--chunk", type=int, default=8192,
+                    help="query chunk rows; batches pad to devices*chunk, so "
+                         "use a small chunk for small smoke runs")
+    ap.add_argument("--ingest", default="snapshot",
+                    choices=["snapshot", "delta"],
+                    help="object motion path: full-snapshot upload per tick, "
+                         "or device-side delta scatter (update_objects)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="submit tick t+1 while tick t's results are in "
+                         "flight (double-buffer staging vs compute)")
     return ap.parse_args()
 
 
@@ -51,33 +69,77 @@ def main():
     import jax
     import numpy as np
 
-    from repro.core import EngineConfig, TickEngine, available_backends
+    from repro.api import KnnSession, ServiceSpec
     from repro.data import make_workload
 
-    if args.backend not in available_backends():
-        raise SystemExit(f"--backend must be one of {available_backends()}")
+    try:
+        spec = ServiceSpec(k=args.k, th_quad=384, l_max=8,
+                           window=min(256, args.chunk), chunk=args.chunk,
+                           backend=args.backend, plan=args.plan,
+                           mesh_shape=args.devices)
+    except ValueError as e:  # eager validation lists the registries
+        raise SystemExit(str(e))
 
-    engine = TickEngine(EngineConfig(k=args.k, th_quad=384, l_max=8, window=256,
-                                     chunk=8192, backend=args.backend,
-                                     plan=args.plan, mesh_shape=args.devices))
+    session = KnnSession(spec)
     workload = make_workload(args.objects, args.distribution, seed=0)
+    all_ids = np.arange(args.objects, dtype=np.int32)
 
     print(f"serving {args.objects} objects x {args.ticks} ticks "
-          f"({args.distribution}, k={args.k}, backend={args.backend})")
-    print(f"{engine.plan.describe()}  (jax sees {jax.device_count()} "
+          f"({args.distribution}, k={args.k}, backend={args.backend}, "
+          f"ingest={args.ingest}, overlap={args.overlap})")
+    print(f"{session.plan.describe()}  (jax sees {jax.device_count()} "
           f"{jax.default_backend()} device(s))")
 
-    def on_tick(res):
-        print(f"tick {res.tick:2d}: {res.wall_s * 1e3:7.1f} ms "
-              f"({args.objects / res.wall_s / 1e3:6.1f}K q/s) "
+    def on_tick(res, tick_s):
+        # under --overlap, res.wall_s spans submit..collection (one round
+        # late); tick_s is the true per-round serve time measured here
+        extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
+        print(f"tick {res.tick:2d}: {tick_s * 1e3:7.1f} ms "
+              f"({args.objects / max(tick_s, 1e-9) / 1e3:6.1f}K q/s) "
               f"iters={res.iterations:3d} cand/q={res.candidates / args.objects:6.0f} "
-              f"{'REBUILT' if res.rebuilt else ''}")
+              f"{'REBUILT' if res.rebuilt else ''}{extra}")
 
-    results = engine.run(workload, ticks=args.ticks, query_rate=1.0, on_tick=on_tick)
-    steady = [r.wall_s for r in results[1:]]
+    # seed device-resident state once; thereafter only motion crosses the host
+    session.ingest_objects(workload.positions())
+    qpos, qid = workload.query_batch(1.0)
+    hq = session.register_queries(qpos, qid)
+
+    results, rounds, pending = [], [], None
+    last = time.perf_counter()
+
+    def collect(handle):
+        results.append(handle.result())
+        nonlocal last
+        now = time.perf_counter()
+        rounds.append(now - last)
+        last = now
+        on_tick(results[-1], rounds[-1])
+
+    for t in range(args.ticks):
+        if t > 0:
+            workload.advance()
+            if args.ingest == "delta":
+                session.update_objects(all_ids, workload.positions())
+            else:
+                session.ingest_objects(workload.positions())
+            session.update_queries(hq, workload.query_batch(1.0)[0])
+        handle = session.submit()
+        if pending is not None:
+            collect(pending)
+        if args.overlap:
+            pending = handle  # collect after the NEXT submit is staged
+        else:
+            collect(handle)
+            pending = None
+    if pending is not None:
+        collect(pending)  # drain round: compute already overlapped earlier
+
+    # exclude the compile round, and (when overlapped) the near-zero drain
+    # round, from the steady-state figure
+    steady = rounds[1:-1] if (args.overlap and len(rounds) > 2) else rounds[1:]
     print(f"\nsteady state: {np.median(steady) * 1e3:.1f} ms/tick = "
           f"{args.objects / np.median(steady):,.0f} queries/s "
-          f"[{engine.plan.describe()}]")
+          f"[{session.plan.describe()}]")
     print("(the paper's GPU pipeline is the TPU dry-run target; CPU numbers "
           "exercise the identical program)")
 

@@ -1,4 +1,6 @@
-"""Quickstart: one batch of k-NN queries through the paper's pipeline.
+"""Quickstart: one batch of k-NN queries through the paper's pipeline,
+then the same workload served statefully through the session API
+(``repro.api`` — persistent queries, delta object updates; DESIGN.md §11).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +12,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import KnnSession, ServiceSpec
 from repro.core import build_index, knn_bruteforce, knn_query_batch
 
 
@@ -44,6 +47,21 @@ def main():
             jnp.asarray(points[:256]), qid[:256], k=k)[1]),
         np.asarray(bd), rtol=1e-5, atol=1e-3)
     print("matches brute force ✓")
+
+    # ---- the serving view of the same problem: a session over ticks -------
+    # queries persist across ticks; only object MOTION crosses the host.
+    session = KnnSession(ServiceSpec(k=k, th_quad=192, l_max=7, window=128,
+                                     chunk=2048, side=22_500.0))
+    session.ingest_objects(points)                     # snapshot seed
+    hq = session.register_queries(points[:512], np.arange(512, dtype=np.int32))
+    r0 = session.submit().result()                     # tick 0 (compiles)
+    moved = rng.choice(n, 1_000, replace=False).astype(np.int32)
+    session.update_objects(moved, points[moved] + 25.0)  # delta scatter
+    r1 = session.submit().result()                     # tick 1, steady state
+    print(f"session: tick0 {r0.wall_s * 1e3:.1f} ms (compile "
+          f"{r0.compile_s:.2f} s), tick1 {r1.wall_s * 1e3:.1f} ms for "
+          f"{session.query_count} persistent queries "
+          f"(registered via {hq})")
 
 
 if __name__ == "__main__":

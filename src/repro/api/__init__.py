@@ -1,0 +1,24 @@
+"""repro.api — the public session-oriented serving facade (DESIGN.md §11).
+
+Speak in sessions, deltas and in-flight ticks, not snapshots:
+
+    from repro.api import KnnSession, ServiceSpec
+
+    session = KnnSession(ServiceSpec(k=32, side=22_500.0))
+    session.ingest_objects(P0)                      # snapshot seed
+    hq = session.register_queries(qpos, qid)        # persistent query group
+    for tick in range(30):
+        session.update_objects(moved_ids, moved_pos)   # delta ingest
+        handle = session.submit()                      # non-blocking
+        ...                                            # stage the next tick
+        res = handle.result()                          # (Q, k) lazily
+
+The execution core underneath is :mod:`repro.core` (`_tick_step`, the
+ExecutionPlan/QueryExecutor seams); ``repro.core.TickEngine`` remains as a
+deprecation shim over a session.
+"""
+from .handles import QueryHandle, TickHandle
+from .session import KnnSession
+from .spec import ServiceSpec
+
+__all__ = ["KnnSession", "ServiceSpec", "QueryHandle", "TickHandle"]

@@ -1,0 +1,124 @@
+"""Handles — the session API's stable references to queries and in-flight ticks.
+
+:class:`QueryHandle` names a group of registered queries; it stays valid
+across ticks (and across registry compaction after drops) until the group is
+dropped.  :class:`TickHandle` names one submitted tick: ``submit()`` returns
+it immediately after dispatch, and ``result()`` materializes the ``(Q, k)``
+result batch lazily — so tick τ+1 can be staged and submitted while τ's
+results are still computing/transferring (the paper's CPU/GPU pipeline
+overlap, DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.ticks import TickResult
+
+__all__ = ["QueryHandle", "TickHandle"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryHandle:
+    """Stable reference to a registered query group (``count`` rows)."""
+
+    hid: int
+    count: int
+
+
+class TickHandle:
+    """One in-flight tick: dispatched device work + lazy host materialization.
+
+    The handle owns references to the tick's device-side outputs.  The big
+    ``(Q, k)`` result arrays stay on device until :meth:`result` is called;
+    the tiny bookkeeping scalars (candidate counter, rebuild trigger) are
+    read by the session when the tick is *finalized* — at the earlier of
+    ``result()`` and the next ``submit()`` — so drift rebuilds apply in tick
+    order even when results are collected late or out of order.
+    """
+
+    def __init__(
+        self,
+        session,
+        tick: int,
+        nn_idx,
+        nn_dist,
+        stats,
+        should_rebuild,
+        nq: int,
+        qids: np.ndarray,
+        owner: np.ndarray,
+        t0: float,
+        submit_s: float,
+        compile_s: float,
+        rebuilt_pre: bool,
+    ):
+        self._session = session
+        self.tick = tick
+        self._nn_idx = nn_idx
+        self._nn_dist = nn_dist
+        self._stats = stats
+        self._should_rebuild = should_rebuild
+        self._nq = nq
+        self._qids = qids
+        self._owner = owner
+        self._t0 = t0
+        self.submit_s = submit_s
+        self.compile_s = compile_s
+        self._rebuilt_pre = rebuilt_pre
+        # set by the session at finalize time
+        self._finalized = False
+        self._rebuilt_post = False
+        self._work: float | None = None
+        self._iterations: int | None = None
+        self._result: TickResult | None = None
+
+    def done(self) -> bool:
+        """Non-blocking: have this tick's result arrays materialized?"""
+        if self._result is not None:
+            return True
+        try:
+            return bool(self._nn_idx.is_ready() and self._nn_dist.is_ready())
+        except AttributeError:  # older jax without Array.is_ready
+            return False
+
+    def result(self) -> TickResult:
+        """Block until this tick's results are on the host (idempotent).
+
+        Finalizes every earlier in-flight tick first (in submit order), so
+        rebuild bookkeeping is independent of the order in which callers
+        collect results.
+        """
+        if self._result is not None:
+            return self._result
+        self._session._finalize_through(self)
+        nq = self._nq
+        nn_idx = np.asarray(self._nn_idx[:nq])
+        nn_dist = np.asarray(self._nn_dist[:nq])
+        self._result = TickResult(
+            tick=self.tick,
+            nn_idx=nn_idx,
+            nn_dist=nn_dist,
+            rebuilt=self._rebuilt_pre or self._rebuilt_post,
+            wall_s=time.perf_counter() - self._t0 - self.compile_s,
+            candidates=self._work,
+            iterations=self._iterations,
+            compile_s=self.compile_s,
+            qids=self._qids,
+        )
+        # release device references so XLA can recycle the buffers
+        self._nn_idx = self._nn_dist = self._stats = self._should_rebuild = None
+        return self._result
+
+    def result_for(self, handle: QueryHandle):
+        """This tick's rows for one query group: (nn_idx, nn_dist, qids).
+
+        Rows are selected by the registry ownership snapshot taken at submit
+        time, so the mapping stays correct even if the group is updated or
+        dropped after this tick was submitted.
+        """
+        res = self.result()
+        rows = np.nonzero(self._owner == handle.hid)[0]
+        return res.nn_idx[rows], res.nn_dist[rows], res.qids[rows]

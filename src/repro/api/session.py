@@ -1,0 +1,430 @@
+"""KnnSession — the session-oriented serving facade (DESIGN.md §11).
+
+The paper's workload is *repeated* k-NN queries: queries persist across ticks
+while object positions stream in as updates, and throughput comes from
+overlapping CPU-side staging with device-side query processing.  A session
+speaks exactly that language:
+
+* **Persistent queries** — ``register_queries`` / ``update_queries`` /
+  ``drop_queries`` maintain a device-resident *padded query registry* with
+  stable :class:`~repro.api.handles.QueryHandle` groups.  The padded device
+  batch is (re)staged only when the registry changes; unchanged query sets
+  ride across ticks with zero host work (``set_queries`` is the bulk
+  snapshot fallback used by the ``TickEngine`` shim).
+* **Delta object updates** — ``update_objects(ids, positions)`` scatters
+  moved objects into the device-resident positions buffer
+  (:func:`repro.core.ticks.scatter_positions`; functional, so an in-flight
+  tick keeps reading the previous buffer — double-buffering);
+  ``ingest_objects`` keeps the full-snapshot upload as the fallback path.
+* **Overlapped ticks** — ``submit()`` stages + dispatches one tick and
+  returns a :class:`~repro.api.handles.TickHandle` immediately; ``result()``
+  materializes lazily.  Submitting tick τ+1 while τ's ``(Q, k)`` results are
+  still in flight double-buffers host staging against device compute, the
+  paper's pipeline.  Drift-rebuild bookkeeping is *finalized* per tick at
+  the earlier of ``result(τ)`` and ``submit(τ+1)``, reading back only two
+  scalars — so the decision sequence is identical to the blocking loop and
+  the session is bit-identical to the snapshot ``TickEngine`` path (pinned
+  by tests/test_api.py).
+
+The execution core is unchanged: every tick is still the ONE jitted device
+program :func:`repro.core.ticks._tick_step` (reindex + the plan's chunked
+sweep + drift statistic), specialized per (backend, plan) and dispatching
+asynchronously (no buffer donation — donated dispatch is host-synchronous
+on this runtime; see the step's docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import resolve_executor
+from repro.core.pipeline import default_max_nav
+from repro.core.plan import pad_capacity, pad_queries, resolve_plan
+from repro.core.quadtree import build_index
+from repro.core.ticks import _tick_step, scatter_positions
+
+from .handles import QueryHandle, TickHandle
+from .spec import ServiceSpec
+
+__all__ = ["KnnSession"]
+
+# compile_s attribution must mirror the PROCESS-global jit cache of
+# _tick_step, not per-session state: a second session with identical shapes
+# and statics hits the warm cache and must report compile_s = 0.
+_COMPILED_KEYS: set = set()
+
+
+class _QueryRegistry:
+    """Host mirror + cached padded device staging of the live query set.
+
+    Rows are kept contiguous (drops compact); padding rows clone the last
+    active query with qid = -2 — the exact :func:`repro.core.plan.pad_queries`
+    convention of the snapshot path, which is what makes session results
+    bit-identical to ``TickEngine``'s.  ``owner`` maps each row to the
+    :class:`QueryHandle` that registered it (-1 for bulk ``set_queries``
+    rows); handles survive compaction because membership is by owner id,
+    not by row position.
+    """
+
+    def __init__(self, multiple: int):
+        self.multiple = multiple  # plan padding granularity (pad_multiple(chunk))
+        self.qpos = np.zeros((0, 2), np.float32)
+        self.qid = np.zeros((0,), np.int32)
+        self.owner = np.zeros((0,), np.int64)
+        self._next_hid = 0
+        self._live: set[int] = set()
+        self._dirty = True
+        self._staged = None
+
+    @property
+    def nq(self) -> int:
+        return int(self.qpos.shape[0])
+
+    def _coerce(self, qpos, qid):
+        qpos = np.asarray(qpos, np.float32).reshape(-1, 2)
+        m = qpos.shape[0]
+        if qid is None:
+            qid = np.full((m,), -2, np.int32)
+        else:
+            qid = np.asarray(qid, np.int32).reshape(-1)
+            if qid.shape[0] != m:
+                raise ValueError(
+                    f"qid has {qid.shape[0]} rows but qpos has {m}"
+                )
+        return qpos, qid
+
+    def register(self, qpos, qid=None) -> QueryHandle:
+        qpos, qid = self._coerce(qpos, qid)
+        if qpos.shape[0] == 0:
+            raise ValueError("cannot register an empty query group")
+        hid = self._next_hid
+        self._next_hid += 1
+        self.qpos = np.concatenate([self.qpos, qpos])
+        self.qid = np.concatenate([self.qid, qid])
+        self.owner = np.concatenate(
+            [self.owner, np.full((qpos.shape[0],), hid, np.int64)]
+        )
+        self._live.add(hid)
+        self._dirty = True
+        return QueryHandle(hid=hid, count=qpos.shape[0])
+
+    def _check(self, handle: QueryHandle):
+        if handle.hid not in self._live:
+            raise KeyError(
+                f"{handle} is not live in this registry (already dropped, "
+                "or invalidated by set_queries)"
+            )
+
+    def rows(self, handle: QueryHandle) -> np.ndarray:
+        self._check(handle)
+        return np.nonzero(self.owner == handle.hid)[0]
+
+    def update(self, handle: QueryHandle, qpos):
+        rows = self.rows(handle)
+        qpos = np.asarray(qpos, np.float32).reshape(-1, 2)
+        if qpos.shape[0] != rows.shape[0]:
+            raise ValueError(
+                f"update_queries: {handle} owns {rows.shape[0]} rows, "
+                f"got {qpos.shape[0]} positions"
+            )
+        self.qpos[rows] = qpos
+        self._dirty = True
+
+    def drop(self, handle: QueryHandle):
+        rows = self.rows(handle)
+        keep = np.ones(self.nq, bool)
+        keep[rows] = False
+        self.qpos = self.qpos[keep]
+        self.qid = self.qid[keep]
+        self.owner = self.owner[keep]
+        self._live.discard(handle.hid)
+        self._dirty = True
+
+    def replace_all(self, qpos, qid=None):
+        """Bulk snapshot staging: replaces every row, invalidates all handles."""
+        qpos, qid = self._coerce(qpos, qid)
+        self.qpos = qpos.copy()
+        self.qid = qid.copy()
+        self.owner = np.full((qpos.shape[0],), -1, np.int64)
+        self._live = set()
+        self._dirty = True
+
+    def staged(self):
+        """(qpos_dev, qid_dev, nq, qids, owner) — padded, device-resident.
+
+        Cached until the registry changes: steady-state ticks with a stable
+        query set re-submit the SAME device arrays, no host pad/upload.
+        """
+        if self._dirty or self._staged is None:
+            qpos_p, qid_p = pad_queries(self.qpos, self.qid, self.multiple)
+            self._staged = (
+                jnp.asarray(qpos_p, jnp.float32),
+                jnp.asarray(qid_p, jnp.int32),
+                self.nq,
+                self.qid.copy(),
+                self.owner.copy(),
+            )
+            self._dirty = False
+        return self._staged
+
+
+class KnnSession:
+    """A live serving session: device-resident object + query state, ticked.
+
+    Construct from a :class:`~repro.api.spec.ServiceSpec`, seed object state
+    with ``ingest_objects`` (snapshot) and queries with ``register_queries``,
+    then per tick: push motion (``update_objects`` deltas or a fresh
+    snapshot), optionally move queries, and ``submit()``.  See the module
+    docstring for the overlap contract.
+    """
+
+    def __init__(self, spec: ServiceSpec):
+        self.spec = spec
+        self.executor = resolve_executor(spec.backend)
+        self.plan = resolve_plan(spec.plan, num_devices=spec.mesh_shape)
+        self._registry = _QueryRegistry(self.plan.pad_multiple(spec.chunk))
+        self._positions = None  # (N, 2) f32, device-resident, by object id
+        self._index = None
+        self._work_at_build: float | None = None
+        self._tick = 0
+        self._pending: deque[TickHandle] = deque()
+
+    # ------------------------------------------------------------ state views
+    @property
+    def tick(self) -> int:
+        """Ticks submitted so far (the next submit gets this tick number)."""
+        return self._tick
+
+    @property
+    def index(self):
+        return self._index
+
+    @property
+    def num_objects(self) -> int:
+        return 0 if self._positions is None else int(self._positions.shape[0])
+
+    @property
+    def query_count(self) -> int:
+        return self._registry.nq
+
+    # ------------------------------------------------------------ object state
+    def ingest_objects(self, positions):
+        """Full-snapshot ingest (fallback path): replace all object positions.
+
+        ``positions`` is (N, 2), indexed by object id.  The first ingest (or
+        any later one) does NOT rebuild the space partition by itself — the
+        partition is built lazily at the first ``submit()`` and thereafter
+        only on the drift trigger, exactly like the snapshot engine.
+        """
+        positions = np.asarray(positions, np.float32)
+        if positions.ndim != 2 or positions.shape[1] != 2:
+            raise ValueError(f"positions must be (N, 2), got {positions.shape}")
+        self._positions = jnp.asarray(positions, jnp.float32)
+
+    def update_objects(self, ids, positions):
+        """Delta ingest: scatter ``positions[i]`` to object ``ids[i]`` on device.
+
+        Steady-state motion costs one O(m) staging + device scatter — the
+        (N, 2) buffer never re-crosses the host boundary.  Batches are
+        padded to ``spec.delta_pad`` rows with the out-of-range sentinel id
+        ``N`` (dropped by the scatter) so every delta size shares one
+        compiled program; duplicate ids within a batch resolve deterministically
+        to the last observation.
+        """
+        if self._positions is None:
+            raise RuntimeError("update_objects before ingest_objects: the "
+                               "session has no object state to update")
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        positions = np.asarray(positions, np.float32).reshape(-1, 2)
+        if ids.shape[0] != positions.shape[0]:
+            raise ValueError(
+                f"update_objects: {ids.shape[0]} ids vs "
+                f"{positions.shape[0]} positions"
+            )
+        m = ids.shape[0]
+        if m == 0:
+            return
+        n = self.num_objects
+        if (ids < 0).any() or (ids >= n).any():
+            bad = ids[(ids < 0) | (ids >= n)]
+            raise ValueError(
+                f"update_objects: ids out of range [0, {n}): {bad[:8]}"
+            )
+        uniq = np.unique(ids)
+        if uniq.shape[0] != m:
+            # several observations for one object in one batch: keep the LAST
+            # (deterministic feed semantics — jnp scatter with repeated
+            # indices applies them in unspecified order, which would break
+            # the delta ≡ snapshot bit-identity contract)
+            _, last_rev = np.unique(ids[::-1], return_index=True)
+            keep = np.sort((m - 1) - last_rev)
+            ids, positions = ids[keep], positions[keep]
+            m = ids.shape[0]
+        pad = pad_capacity(m, self.spec.delta_pad) - m
+        if pad:
+            ids = np.concatenate([ids, np.full((pad,), n, np.int32)])
+            positions = np.concatenate(
+                [positions, np.zeros((pad, 2), np.float32)]
+            )
+        self._positions = scatter_positions(
+            self._positions, jnp.asarray(ids), jnp.asarray(positions)
+        )
+
+    # ------------------------------------------------------------ query state
+    def register_queries(self, qpos, qid=None) -> QueryHandle:
+        """Add a persistent query group; returns its stable handle.
+
+        ``qid`` is the issuing object id per query (excluded from its own
+        result list); default -2 = no exclusion, matching
+        ``knn_query_batch_chunked``.
+        """
+        return self._registry.register(qpos, qid)
+
+    def update_queries(self, handle: QueryHandle, qpos):
+        """Move a registered group: same row count, new positions.
+
+        Any registry change currently restages the whole padded batch on the
+        next submit (host pad + upload, O(total registry rows)); the zero-
+        host-work steady state holds for query sets that don't move.  A
+        device-side qpos scatter (mirroring ``update_objects``) is the
+        prepared next step — it must also maintain the padding rows, which
+        clone the last active query for snapshot-path bit-identity.
+        """
+        self._registry.update(handle, qpos)
+
+    def drop_queries(self, handle: QueryHandle):
+        """Remove a group; its rows stop being served from the next submit."""
+        self._registry.drop(handle)
+
+    def set_queries(self, qpos, qid=None):
+        """Bulk snapshot staging of the whole query set (the shim's path).
+
+        Replaces the registry contents and invalidates all handles; prefer
+        ``register_queries`` + ``update_queries`` for persistent sets.
+        """
+        self._registry.replace_all(qpos, qid)
+
+    # ------------------------------------------------------------ serving
+    def _build(self):
+        """(Re)build the space partition from the current device positions."""
+        self._index = build_index(
+            self._positions,
+            jnp.asarray(self.spec.origin, jnp.float32),
+            self.spec.side,
+            l_max=self.spec.l_max,
+            th_quad=self.spec.th_quad,
+        )
+        self._work_at_build = None  # set at the next tick's finalize
+
+    def _finalize_one(self, h: TickHandle):
+        """Read back the tick's bookkeeping scalars and apply the drift policy.
+
+        Blocks only on the two scalars (the step must have finished computing,
+        but the big result arrays stay un-materialized on device).  Mirrors
+        the snapshot engine exactly: the first finalized tick after a build
+        becomes the work baseline; later ticks whose candidate volume exceeds
+        ``rebuild_factor`` × baseline rebuild the partition — from the newest
+        object state — before the next dispatch.
+        """
+        h._work = float(h._stats.candidates)
+        h._iterations = int(h._stats.iterations)
+        if self._work_at_build is None:
+            self._work_at_build = h._work
+        elif bool(h._should_rebuild):
+            self._build()
+            h._rebuilt_post = True
+        h._finalized = True
+
+    def _finalize_through(self, target: TickHandle | None = None):
+        """Finalize pending ticks in submit order, up to ``target`` (or all)."""
+        if target is not None and target._finalized:
+            return  # don't touch (and block on) target's successors
+        while self._pending:
+            h = self._pending.popleft()
+            self._finalize_one(h)
+            if h is target:
+                break
+
+    def submit(self) -> TickHandle:
+        """Dispatch one tick against the current object + query state.
+
+        Returns immediately after host staging + device dispatch; call
+        ``TickHandle.result()`` to materialize.  Any still-pending earlier
+        tick is finalized first (scalar readback + drift policy), which is
+        the synchronization point that keeps overlapped submission
+        bit-identical to the blocking loop.
+        """
+        if self._positions is None:
+            raise RuntimeError("submit before ingest_objects: no object state")
+        if self._registry.nq == 0:
+            raise RuntimeError("submit with an empty query registry: "
+                               "register_queries (or set_queries) first")
+        self._finalize_through()
+        t0 = time.perf_counter()
+        rebuilt_pre = False
+        if self._index is None:
+            self._build()
+            rebuilt_pre = True
+        qpos_dev, qid_dev, nq, qids, owner = self._registry.staged()
+        spec = self.spec
+        self._index, nn_idx, nn_dist, stats, should_rebuild = _tick_step(
+            self._index,
+            self._positions,
+            qpos_dev,
+            qid_dev,
+            jnp.float32(np.inf if self._work_at_build is None
+                        else self._work_at_build),
+            jnp.float32(spec.rebuild_factor),
+            k=spec.k,
+            window=spec.window,
+            chunk=spec.chunk,
+            max_nav=default_max_nav(spec.l_max),
+            max_iters=spec.max_iters,
+            executor=self.executor,
+            plan=self.plan,
+        )
+        submit_s = time.perf_counter() - t0
+        # key must mirror everything the jit cache keys on: shapes AND the
+        # statics (th_quad/l_max ride in the index pytree's meta fields)
+        key = (int(qpos_dev.shape[0]), self.num_objects, spec.k, spec.window,
+               spec.chunk, spec.l_max, spec.th_quad, spec.max_iters,
+               self.executor, self.plan)
+        compile_s = submit_s if key not in _COMPILED_KEYS else 0.0
+        _COMPILED_KEYS.add(key)
+        h = TickHandle(
+            session=self,
+            tick=self._tick,
+            nn_idx=nn_idx,
+            nn_dist=nn_dist,
+            stats=stats,
+            should_rebuild=should_rebuild,
+            nq=nq,
+            qids=qids,
+            owner=owner,
+            t0=t0,
+            submit_s=submit_s,
+            compile_s=compile_s,
+            rebuilt_pre=rebuilt_pre,
+        )
+        self._tick += 1
+        self._pending.append(h)
+        return h
+
+    def process_tick(self, positions, qpos, qid=None):
+        """Blocking snapshot convenience: ingest + set_queries + submit + result.
+
+        ``wall_s`` here is measured from the top of the call — staging
+        included — matching the pre-session ``TickEngine.process_tick``
+        boundary, so BENCH rows built on it stay comparable across PRs.
+        """
+        t0 = time.perf_counter()
+        self.ingest_objects(positions)
+        self.set_queries(qpos, qid)
+        res = self.submit().result()
+        return dataclasses.replace(
+            res, wall_s=time.perf_counter() - t0 - res.compile_s
+        )

@@ -1,0 +1,88 @@
+"""ServiceSpec — the declarative description of one k-NN serving session.
+
+A spec subsumes :class:`repro.core.ticks.EngineConfig` (algorithm + device
+layout knobs) **and** the workload geometry (the squared region ``G`` the
+paper's index partitions: ``origin`` + ``side``) that used to ride as loose
+``TickEngine`` constructor arguments, plus the session-only staging knob
+``delta_pad``.  It is frozen, hashable and eagerly validated: unknown
+``backend``/``plan`` names and inconsistent sweep geometry raise at
+construction time with the full registry listing, instead of surfacing as a
+deep registry ``KeyError`` on the first tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.ticks import EngineConfig, validate_engine_params
+
+__all__ = ["ServiceSpec"]
+
+SIDE_DEFAULT = 22_500.0  # paper Table 1: squared region of side 22500 u
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """Everything a :class:`repro.api.KnnSession` needs, declared up front.
+
+    Algorithm / layout fields mirror ``EngineConfig`` one-to-one (same
+    defaults); ``origin``/``side`` pin the region ``G`` of the quadtree;
+    ``delta_pad`` rounds ``update_objects`` batches up to a fixed multiple
+    (sentinel-padded, dropped by the scatter) so every delta size reuses one
+    compiled scatter program.
+    """
+
+    k: int = 32
+    th_quad: int = 192
+    l_max: int = 8
+    window: int = 256
+    chunk: int = 8192
+    rebuild_factor: float = 2.0
+    region_pad: float = 1e-3
+    backend: str = "dense_topk"
+    plan: str = "single"
+    mesh_shape: int | None = None
+    max_iters: int = 100_000
+    origin: tuple[float, float] = (0.0, 0.0)
+    side: float = SIDE_DEFAULT
+    delta_pad: int = 1024
+
+    def __post_init__(self):
+        validate_engine_params(
+            k=self.k, window=self.window, chunk=self.chunk,
+            backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
+        )
+        if self.side <= 0:
+            raise ValueError(f"side must be > 0, got {self.side}")
+        if len(self.origin) != 2:
+            raise ValueError(f"origin must be an (x, y) pair, got {self.origin!r}")
+        if self.delta_pad < 1:
+            raise ValueError(f"delta_pad must be >= 1, got {self.delta_pad}")
+
+    def engine_config(self) -> EngineConfig:
+        """The EngineConfig subset of this spec (for core-layer consumers)."""
+        return EngineConfig(
+            k=self.k, th_quad=self.th_quad, l_max=self.l_max,
+            window=self.window, chunk=self.chunk,
+            rebuild_factor=self.rebuild_factor, region_pad=self.region_pad,
+            backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
+            max_iters=self.max_iters,
+        )
+
+    @classmethod
+    def from_engine(
+        cls,
+        cfg: EngineConfig,
+        *,
+        origin: tuple[float, float] = (0.0, 0.0),
+        side: float = SIDE_DEFAULT,
+        delta_pad: int = 1024,
+    ) -> "ServiceSpec":
+        """Lift an EngineConfig (+ the old loose geometry args) into a spec."""
+        return cls(
+            k=cfg.k, th_quad=cfg.th_quad, l_max=cfg.l_max, window=cfg.window,
+            chunk=cfg.chunk, rebuild_factor=cfg.rebuild_factor,
+            region_pad=cfg.region_pad, backend=cfg.backend, plan=cfg.plan,
+            mesh_shape=cfg.mesh_shape, max_iters=cfg.max_iters,
+            origin=(float(origin[0]), float(origin[1])), side=float(side),
+            delta_pad=delta_pad,
+        )

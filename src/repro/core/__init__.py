@@ -17,11 +17,18 @@ from .plan import (
     knn_chunked_device,
     knn_query_batch_chunked,
     knn_sharded_device,
+    pad_capacity,
     pad_queries,
     run_plan_device,
 )
 from .quadtree import QuadtreeIndex, build_index, leaf_of_points, reindex_objects
-from .ticks import EngineConfig, TickEngine, TickResult
+from .ticks import (
+    EngineConfig,
+    TickEngine,
+    TickResult,
+    scatter_positions,
+    validate_engine_params,
+)
 
 __all__ = [
     "knn_bruteforce",
@@ -38,8 +45,11 @@ __all__ = [
     "knn_query_batch",
     "knn_query_batch_chunked",
     "knn_sharded_device",
+    "pad_capacity",
     "pad_queries",
     "run_plan_device",
+    "scatter_positions",
+    "validate_engine_params",
     "ExecutionPlan",
     "SinglePlan",
     "ShardedPlan",

@@ -13,8 +13,10 @@ axes, both selected by name at this layer boundary:
 
   * **backend** (*what* merges a candidate window) — this module;
   * **plan** (*where* the sweep runs: one device or a ``("query",)`` mesh) —
-    ``core/plan.py``; re-exposed here (:func:`available_plans` /
-    :func:`resolve_plan`) so callers configure both axes at one seam.
+    ``core/plan.py``; re-exposed here (:func:`available_plans`, plus
+    ``resolve_plan`` as a lazy module-level alias of the canonical
+    ``repro.core.plan.resolve_plan``) so callers configure both axes at one
+    seam without a second resolution code path.
 
 ``QueryExecutor`` is a frozen (hence hashable) dataclass so it can ride
 through ``jax.jit`` as a *static* argument: a jitted pipeline specializes per
@@ -47,11 +49,17 @@ def available_plans() -> tuple[str, ...]:
     return plan_names()
 
 
-def resolve_plan(plan, *, num_devices=None):
-    """Name | ExecutionPlan | None -> ExecutionPlan (default: ``single``)."""
-    from .plan import resolve_plan as impl
+def __getattr__(name):
+    # ``resolve_plan`` is a documented ALIAS of the canonical entry point
+    # ``repro.core.plan.resolve_plan`` — resolved lazily (plan.py imports the
+    # pipeline, which imports this module) and re-exported as the *same*
+    # function object, so there is exactly one resolution code path
+    # (tests/test_plan.py pins the identity).
+    if name == "resolve_plan":
+        from .plan import resolve_plan
 
-    return impl(plan, num_devices=num_devices)
+        return resolve_plan
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)

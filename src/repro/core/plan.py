@@ -60,6 +60,7 @@ __all__ = [
     "register_plan",
     "resolve_plan",
     "plan_names",
+    "pad_capacity",
     "pad_queries",
     "knn_chunked_device",
     "knn_sharded_device",
@@ -68,22 +69,34 @@ __all__ = [
 ]
 
 
+def pad_capacity(nq: int, multiple: int) -> int:
+    """Padded row count for ``nq`` queries at the plan's granularity.
+
+    This is the capacity of the persistent padded query registry
+    (``repro.api``): the registry restages its device batch only when the
+    live set changes, and the compiled tick step is keyed by this capacity
+    (chunk count per shard), never by the raw query count.
+    """
+    return max(1, -(-nq // multiple)) * multiple
+
+
 def pad_queries(qpos, qid, multiple: int):
-    """Host-side pad of (Q,2)/(Q,) to a whole number of ``multiple`` rows.
+    """Host-side pad of (Q,2)/(Q,) to :func:`pad_capacity` rows.
 
     ``multiple`` is the plan's padding granularity (:meth:`ExecutionPlan.
     pad_multiple`): ``chunk`` for the single plan, ``num_devices * chunk`` for
     the sharded plan — one pad, host-side, so every device shard is a whole
-    number of identical fixed-shape chunks and the compiled program is keyed
-    by *chunk count per shard*, never by the raw query count.  Padding rows
-    clone the last query with qid=-2; callers strip them after the gather via
-    ``[:Q]`` (the global unsort returns them to the tail).
+    number of identical fixed-shape chunks.  Padding rows clone the last
+    query with qid=-2; callers strip them after the gather via ``[:Q]`` (the
+    global unsort returns them to the tail).  Both the snapshot path
+    (``TickEngine``/``knn_query_batch_chunked``) and the session registry pad
+    through HERE, which is what makes their padded batches — and hence their
+    results and stats — bit-identical.
     """
     import numpy as np
 
     nq = qpos.shape[0]
-    n_blocks = max(1, -(-nq // multiple))
-    padded = n_blocks * multiple
+    padded = pad_capacity(nq, multiple)
     if padded == nq:
         return qpos, qid
     pad = padded - nq

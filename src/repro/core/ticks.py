@@ -1,16 +1,28 @@
 """Iterated batch processing of k-NN queries over ticks (paper Sec. 2.2/2.3).
 
-``TickEngine`` is the deployable serving artifact: per tick it ingests the
-up-to-date positions ``P`` and the query batch ``Q``, maintains the spatial
-index, runs the iterative pipeline and emits the result batch ``R`` — i.e. the
-repeated spatial join of the problem statement, with timeslice semantics.
+Since the session-API redesign (DESIGN.md §11) this module is the **execution
+core** under the public serving facade :mod:`repro.api`: it owns the jitted
+per-tick device program (:func:`_tick_step`), the device-side delta-ingest
+primitive (:func:`scatter_positions`), the engine configuration
+(:class:`EngineConfig`, eagerly validated) and the per-tick result record
+(:class:`TickResult`).  The stateful serving loop — persistent query
+registry, delta object updates, overlapped submit — lives in
+:class:`repro.api.KnnSession`; :class:`TickEngine` remains here as a **thin
+deprecation shim** over a session so PR-1/PR-2 call sites keep working
+unchanged (``TickEngine.run`` ≡ a blocking ``KnnSession`` loop, pinned by
+tests/test_api.py).
 
-The whole steady-state tick is ONE donated-buffer jitted device program
-(:func:`_tick_step`, DESIGN.md §8): stage (ii) index refresh (object re-sort +
-interval/pyramid rebuild), the chunked query sweep (``lax.map`` over fixed-
-shape chunks — no per-chunk host loop), and the drift statistic all run
-device-side; the host reads back results plus one boolean.  Donation lets XLA
-reuse the previous tick's index buffers for the refreshed index in place.
+The whole steady-state tick is ONE jitted device program (:func:`_tick_step`,
+DESIGN.md §8/§11): stage (ii) index refresh (object re-sort + interval/
+pyramid rebuild), the chunked query sweep (``lax.map`` over fixed-shape
+chunks — no per-chunk host loop), and the drift statistic all run device-
+side; the host reads back results plus one boolean.  The step dispatches
+*asynchronously* — deliberately no buffer donation, which would force a
+synchronous dispatch (see the docstring) — so the session can overlap next-
+tick staging with this tick's device compute.  State *ingest* is split out
+of the step: positions cross the host boundary either as a full snapshot
+(``jnp.asarray``) or as a delta scatter of just the moved rows
+(:func:`scatter_positions`); the step itself only ever sees device arrays.
 
 Index maintenance follows the paper (Sec. 4.1.1): stage (ii) runs every tick;
 stage (i) (the space partition / z_map) is rebuilt **only** when the measured
@@ -31,20 +43,58 @@ back ``psum``-reduced so the rebuild trigger sees the whole tick's volume.
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from functools import partial
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .executor import QueryExecutor, resolve_executor
-from .pipeline import default_max_nav
-from .plan import ExecutionPlan, pad_queries, resolve_plan
-from .quadtree import build_index, reindex_objects
+from .executor import QueryExecutor, available_backends, available_plans
+from .plan import ExecutionPlan
+from .quadtree import reindex_objects
 
-__all__ = ["TickEngine", "TickResult", "EngineConfig"]
+__all__ = [
+    "TickEngine",
+    "TickResult",
+    "EngineConfig",
+    "validate_engine_params",
+    "scatter_positions",
+]
+
+
+def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None):
+    """Eager validation shared by ``EngineConfig`` and ``repro.api.ServiceSpec``.
+
+    Raises ``ValueError`` with the full registry listing for unknown
+    ``backend``/``plan`` names (instead of the deep registry ``KeyError`` that
+    used to surface on first use), and rejects geometry that the chunked sweep
+    cannot serve (``chunk`` not a multiple of ``window``, ``k > chunk``).
+    Instances (``QueryExecutor`` / ``ExecutionPlan``) pass through unchecked —
+    they validated themselves on construction.
+    """
+    if isinstance(backend, str) and backend not in available_backends():
+        raise ValueError(
+            f"unknown backend {backend!r}; registered SCAN backends: "
+            f"{available_backends()}"
+        )
+    if isinstance(plan, str) and plan not in available_plans():
+        raise ValueError(
+            f"unknown execution plan {plan!r}; registered plans: "
+            f"{available_plans()}"
+        )
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if chunk < 1 or chunk % window != 0:
+        raise ValueError(
+            f"chunk ({chunk}) must be a positive multiple of window ({window})"
+        )
+    if k > chunk:
+        raise ValueError(f"k ({k}) must be <= chunk ({chunk})")
+    if mesh_shape is not None and mesh_shape < 1:
+        raise ValueError(f"mesh_shape must be >= 1, got {mesh_shape}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +111,12 @@ class EngineConfig:
     mesh_shape: int | None = None  # devices on the ("query",) axis; None = all
     max_iters: int = 100_000
 
+    def __post_init__(self):
+        validate_engine_params(
+            k=self.k, window=self.window, chunk=self.chunk,
+            backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
+        )
+
 
 @dataclasses.dataclass
 class TickResult:
@@ -68,16 +124,17 @@ class TickResult:
     nn_idx: np.ndarray  # (Q, k)
     nn_dist: np.ndarray  # (Q, k)
     rebuilt: bool
-    wall_s: float
+    wall_s: float  # submit -> results materialized, EXCLUDING compile_s
     candidates: float
     iterations: int
+    compile_s: float = 0.0  # trace+compile time, nonzero on first-shape ticks
+    qids: np.ndarray | None = None  # (Q,) registry qids, row-aligned with nn_*
 
 
 @partial(
     jax.jit,
     static_argnames=("k", "window", "chunk", "max_nav", "max_iters",
                      "executor", "plan"),
-    donate_argnums=(0,),
 )
 def _tick_step(
     index,
@@ -103,10 +160,23 @@ def _tick_step(
     ``lax.map``; under ``sharded`` it is the ``shard_map`` fan-out over the
     ``("query",)`` mesh with the refreshed index replicated and the stats
     ``psum``-reduced, so the drift comparison below sees whole-tick volume.
-    The incoming index is donated — XLA refreshes it in place.  On ticks whose
-    index was just built from these exact positions the reindex is a semantic
-    no-op; running it anyway keeps ONE compiled program (a static skip flag
-    would double the compile for a microseconds-scale saving).
+    On ticks whose index was just built from these exact positions the
+    reindex is a semantic no-op; running it anyway keeps ONE compiled program
+    (a static skip flag would double the compile for a microseconds-scale
+    saving).
+
+    The step deliberately does NOT donate the incoming index: donated
+    arguments make the host-side dispatch *synchronous* on this runtime (the
+    call blocks for the whole device step instead of returning a future,
+    measured while building benchmarks/s6_serving.py), which would serialize
+    host staging against device compute and defeat the session API's
+    submit/result overlap.  The in-place refresh saved one index-sized
+    allocation per tick; the overlap is worth far more, and XLA's allocator
+    still recycles the freed buffers.
+
+    ``positions`` and ``qpos``/``qid`` are *already device-resident* (staged
+    by the session via snapshot upload, delta scatter, or the persistent
+    padded query registry); this step never touches the host boundary.
     """
     index = reindex_objects(index, positions)
     nn_idx, nn_dist, stats = plan.run(
@@ -124,79 +194,73 @@ def _tick_step(
     return index, nn_idx, nn_dist, stats, should_rebuild
 
 
+@jax.jit
+def scatter_positions(positions, ids, new_pos):
+    """Delta object ingest: scatter ``new_pos`` rows at ``ids`` device-side.
+
+    This is the session API's ``update_objects`` path (DESIGN.md §11): only
+    the moved rows cross the host boundary; the (N, 2) buffer never does.
+    Rows whose id is out of range are dropped (``mode="drop"``): callers pad
+    variable-size update batches to a fixed multiple with the sentinel id
+    ``N`` so every delta size reuses one compiled scatter.  Functional (no
+    donation) on purpose — twofold: donated dispatch is synchronous on this
+    runtime (see ``_tick_step``), and an in-flight tick may still be reading
+    the previous buffer while the session scatters the next tick's motion
+    into a fresh one (double-buffering).
+    """
+    return positions.at[ids].set(new_pos, mode="drop")
+
+
 class TickEngine:
+    """Deprecation shim: the PR-1/PR-2 snapshot-per-tick API over a session.
+
+    ``process_tick`` stages a full position snapshot + a full query batch and
+    blocks for results, exactly as before — but it now routes through
+    :class:`repro.api.KnnSession` (snapshot ingest + bulk ``set_queries`` +
+    ``submit().result()``), so there is a single serving implementation.
+    New code should construct a ``KnnSession`` from a ``ServiceSpec`` and use
+    persistent query handles + delta object updates instead.
+    """
+
     def __init__(self, cfg: EngineConfig, origin=(0.0, 0.0), side: float = 22_500.0):
+        warnings.warn(
+            "TickEngine is a deprecation shim over repro.api.KnnSession; "
+            "migrate to the session API (ServiceSpec + KnnSession)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.api import KnnSession, ServiceSpec  # lazy: api sits above core
+
         self.cfg = cfg
         self.origin = np.asarray(origin, np.float32)
         self.side = float(side)
-        self.index = None
-        self.executor = resolve_executor(cfg.backend)
-        self.plan = resolve_plan(cfg.plan, num_devices=cfg.mesh_shape)
-        self._work_at_build: float | None = None
+        self.session = KnnSession(
+            ServiceSpec.from_engine(
+                cfg, origin=(float(self.origin[0]), float(self.origin[1])),
+                side=self.side,
+            )
+        )
         self.tick = 0
         self.history: list[TickResult] = []
 
-    def _build(self, positions: np.ndarray):
-        self.index = build_index(
-            jnp.asarray(positions),
-            jnp.asarray(self.origin),
-            self.side,
-            l_max=self.cfg.l_max,
-            th_quad=self.cfg.th_quad,
-        )
-        self._work_at_build = None  # set after first processed tick
+    # legacy attribute surface (benchmarks/examples read these)
+    @property
+    def executor(self) -> QueryExecutor:
+        return self.session.executor
+
+    @property
+    def plan(self) -> ExecutionPlan:
+        return self.session.plan
+
+    @property
+    def index(self):
+        return self.session.index
 
     def process_tick(
         self, positions: np.ndarray, qpos: np.ndarray, qid: np.ndarray | None
     ) -> TickResult:
         """One iteration of the repeated spatial join: (P_tau, Q_tau) -> R_tau."""
-        t0 = time.perf_counter()
-        rebuilt = False
-        if self.index is None:
-            self._build(positions)
-            rebuilt = True
-        nq = qpos.shape[0]
-        if qid is None:
-            qid = np.full((nq,), -2, np.int32)
-        # host-side pad, once, to the plan's granularity (num_devices * chunk
-        # for the sharded plan): the compiled step is keyed by chunk count per
-        # shard, not nq; padding rows are stripped after the gather via [:nq]
-        qpos_p, qid_p = pad_queries(
-            np.asarray(qpos), np.asarray(qid),
-            self.plan.pad_multiple(self.cfg.chunk),
-        )
-        # the whole tick is one jitted call; host reads results + one bool back
-        self.index, nn_idx, nn_dist, stats, should_rebuild = _tick_step(
-            self.index,
-            jnp.asarray(positions, jnp.float32),
-            jnp.asarray(qpos_p, jnp.float32),
-            jnp.asarray(qid_p, jnp.int32),
-            jnp.float32(np.inf if self._work_at_build is None else self._work_at_build),
-            jnp.float32(self.cfg.rebuild_factor),
-            k=self.cfg.k,
-            window=self.cfg.window,
-            chunk=self.cfg.chunk,
-            max_nav=default_max_nav(self.cfg.l_max),
-            max_iters=self.cfg.max_iters,
-            executor=self.executor,
-            plan=self.plan,
-        )
-        work = float(stats.candidates)
-        if self._work_at_build is None:
-            self._work_at_build = work
-        elif bool(should_rebuild):
-            # distribution drifted: rebuild partition for next tick's index now
-            self._build(positions)
-            rebuilt = True
-        res = TickResult(
-            tick=self.tick,
-            nn_idx=np.asarray(nn_idx[:nq]),
-            nn_dist=np.asarray(nn_dist[:nq]),
-            rebuilt=rebuilt,
-            wall_s=time.perf_counter() - t0,
-            candidates=work,
-            iterations=int(stats.iterations),
-        )
+        res = self.session.process_tick(positions, qpos, qid)
         self.tick += 1
         self.history.append(res)
         return res

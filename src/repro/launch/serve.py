@@ -3,7 +3,9 @@
 Two modes, matching the paper's kind (query serving) and the LM stack:
 
   knn   — the paper's end-to-end service: repeated k-NN query batches over
-          moving objects, one batch per tick (TickEngine).
+          moving objects, one batch per tick, served through the session
+          facade (repro.api.KnnSession: persistent queries, delta object
+          ingest, optional overlapped submit; DESIGN.md §11).
   lm    — batched LM token serving: prefill a batch of prompts, then decode
           tokens with the per-layer KV cache / recurrent state.
 
@@ -21,8 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import KnnSession, ServiceSpec
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import EngineConfig, TickEngine
 from repro.data import make_workload
 from repro.dist import use_rules
 from repro.launch.mesh import make_local_mesh
@@ -37,22 +39,38 @@ from repro.models import (
 
 
 def serve_knn(args) -> int:
-    eng = TickEngine(
-        EngineConfig(k=args.k, th_quad=args.th_quad, l_max=args.l_max, chunk=args.chunk)
+    session = KnnSession(
+        ServiceSpec(k=args.k, th_quad=args.th_quad, l_max=args.l_max,
+                    chunk=args.chunk, plan=args.plan)
     )
     w = make_workload(args.objects, args.distribution, seed=args.seed)
     tput = []
 
-    def on_tick(res):
-        qps = args.objects / max(res.wall_s, 1e-9)
+    def on_tick(res, tick_s):
+        # tick_s spans staging + submit + result (the pre-session boundary),
+        # so throughput stays comparable with PR-2 serve output
+        qps = args.objects / max(tick_s, 1e-9)
         tput.append(qps)
+        extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
         print(
-            f"[knn] tick {res.tick}: {res.wall_s * 1e3:.1f} ms, {qps / 1e3:.1f}K queries/s, "
-            f"iters={res.iterations} rebuilt={res.rebuilt}",
+            f"[knn] tick {res.tick}: {tick_s * 1e3:.1f} ms, {qps / 1e3:.1f}K queries/s, "
+            f"iters={res.iterations} rebuilt={res.rebuilt}{extra}",
             flush=True,
         )
 
-    eng.run(w, ticks=args.ticks, on_tick=on_tick)
+    # session loop: queries registered once; the whole population moves every
+    # tick, so full-snapshot ingest is the cheaper path (update_objects is for
+    # fractional feeds — see benchmarks/s6_serving.py)
+    session.ingest_objects(w.positions())
+    hq = session.register_queries(*w.query_batch(1.0))
+    for t in range(args.ticks):
+        t0 = time.time()
+        if t > 0:
+            w.advance()
+            session.ingest_objects(w.positions())
+            session.update_queries(hq, w.query_batch(1.0)[0])
+        res = session.submit().result()
+        on_tick(res, time.time() - t0 - res.compile_s)
     print(f"[knn] steady-state throughput: {np.median(tput[1:]):.0f} queries/s")
     return 0
 
@@ -120,6 +138,7 @@ def main(argv=None) -> int:
     k.add_argument("--l-max", type=int, default=8)
     k.add_argument("--chunk", type=int, default=8192)
     k.add_argument("--distribution", default="uniform")
+    k.add_argument("--plan", default="single")
     k.add_argument("--seed", type=int, default=0)
     m = sub.add_parser("lm")
     m.add_argument("--arch", default="rwkv6_3b", choices=list(ARCH_IDS))

@@ -1,0 +1,482 @@
+"""Session-oriented serving API (repro.api, DESIGN.md §11).
+
+The acceptance contract of the api_redesign PR: the ``KnnSession`` delta-
+update and overlapped-submit paths are **bit-identical** to the snapshot
+``TickEngine`` path — same padded batches, same jitted step, same drift
+bookkeeping sequence — on all three workload families and under both
+execution plans.  Plus: eager ServiceSpec/EngineConfig validation, the
+persistent query registry (add/update/drop with stable handles), two-in-
+flight TickHandle ordering, the compile_s/wall_s split, and the deprecation-
+shim equivalence (TickEngine.run ≡ a blocking KnnSession loop).
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import KnnSession, QueryHandle, ServiceSpec
+from repro.core import EngineConfig, TickEngine, knn_bruteforce_chunked
+from repro.data import make_workload
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+NDEV = jax.device_count()
+
+
+def _spec(plan="single", **kw):
+    base = dict(k=6, th_quad=24, l_max=6, window=32, chunk=64, side=22_500.0,
+                plan=plan, mesh_shape=NDEV if plan == "sharded" else None,
+                delta_pad=64)
+    base.update(kw)
+    return ServiceSpec(**base)
+
+
+def _engine(spec):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return TickEngine(spec.engine_config(), origin=spec.origin,
+                          side=spec.side)
+
+
+# ----------------------------------------------------------------- validation
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(backend="nope"), r"unknown backend 'nope'.*registered SCAN backends.*dense_topk"),
+    (dict(plan="nope"), r"unknown execution plan 'nope'.*registered plans.*single"),
+    (dict(chunk=100, window=64), r"chunk \(100\).*multiple of window \(64\)"),
+    (dict(k=3000, chunk=2048, window=256), r"k \(3000\).*<= chunk \(2048\)"),
+    (dict(mesh_shape=0), r"mesh_shape"),
+    (dict(side=-1.0), r"side"),
+    (dict(delta_pad=0), r"delta_pad"),
+])
+def test_service_spec_validates_eagerly(bad, match):
+    with pytest.raises(ValueError, match=match):
+        ServiceSpec(**bad)
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(backend="nope"), r"unknown backend.*registered SCAN backends"),
+    (dict(plan="nope"), r"unknown execution plan.*registered plans"),
+    (dict(chunk=100, window=64), r"chunk.*multiple of window"),
+    (dict(k=3000, chunk=2048, window=256), r"k.*<= chunk"),
+])
+def test_engine_config_validates_eagerly(bad, match):
+    """Bad names used to surface only as a deep registry KeyError on first use."""
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**bad)
+
+
+def test_spec_subsumes_engine_config_roundtrip():
+    cfg = EngineConfig(k=8, th_quad=48, l_max=6, window=64, chunk=1024,
+                       backend="brute", plan="sharded", mesh_shape=1)
+    spec = ServiceSpec.from_engine(cfg, origin=(1.0, 2.0), side=9_000.0)
+    assert spec.engine_config() == cfg
+    assert spec.origin == (1.0, 2.0) and spec.side == 9_000.0
+
+
+# ------------------------------------------------- delta-update parity (tent)
+
+def _moved_subset(rng, pts, frac, side=22_500.0):
+    m = max(1, int(len(pts) * frac))
+    ids = rng.choice(len(pts), m, replace=False).astype(np.int32)
+    new = pts.copy()
+    new[ids] = np.clip(
+        new[ids] + rng.uniform(-180, 180, (m, 2)).astype(np.float32),
+        0, side - 1e-3,
+    ).astype(np.float32)
+    return ids, new
+
+
+@pytest.mark.parametrize("dist", ["uniform", "gaussian", "network"])
+def test_delta_updates_bit_identical_to_snapshot(dist):
+    """N scattered updates (applied in several chunks) ≡ the equivalent full
+    snapshot through the TickEngine path — ids AND distances bitwise."""
+    w = make_workload(700, dist, seed=5)
+    pts = w.positions().copy()
+    qid = np.arange(len(pts), dtype=np.int32)
+    rng = np.random.default_rng(17)
+
+    spec = _spec()
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts, qid)
+    eng = _engine(spec)
+
+    cur = pts
+    for t in range(3):
+        if t > 0:
+            ids, cur = _moved_subset(rng, cur, frac=0.3)
+            # deltas land in three separate scatter calls (accumulation path)
+            for part in np.array_split(np.arange(len(ids)), 3):
+                sess.update_objects(ids[part], cur[ids[part]])
+            sess.update_queries(hq, cur)
+        r_s = sess.submit().result()
+        r_e = eng.process_tick(cur, cur, qid)
+        np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
+        np.testing.assert_array_equal(r_s.nn_dist, r_e.nn_dist)
+        assert r_s.rebuilt == r_e.rebuilt
+        assert r_s.candidates == r_e.candidates
+
+
+def test_delta_updates_bit_identical_sharded_plan():
+    w = make_workload(500, "gaussian", seed=3, hotspots=4)
+    pts = w.positions().copy()
+    qid = np.arange(len(pts), dtype=np.int32)
+    rng = np.random.default_rng(7)
+    spec = _spec(plan="sharded", chunk=32)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts, qid)
+    eng = _engine(spec)
+    cur = pts
+    for t in range(2):
+        if t > 0:
+            ids, cur = _moved_subset(rng, cur, frac=0.5)
+            sess.update_objects(ids, cur[ids])
+            sess.update_queries(hq, cur)
+        r_s = sess.submit().result()
+        r_e = eng.process_tick(cur, cur, qid)
+        np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
+        np.testing.assert_array_equal(r_s.nn_dist, r_e.nn_dist)
+
+
+# ------------------------------------------------------ query registry (tent)
+
+@pytest.mark.parametrize("plan", ["single", "sharded"])
+def test_query_registry_add_drop_across_ticks(plan):
+    """Handles persist across ticks; drops compact the registry; the served
+    batch always equals the equivalent snapshot batch, bitwise."""
+    rng = np.random.default_rng(4)
+    pts = rng.uniform(0, 22_500, (600, 2)).astype(np.float32)
+    qa = rng.uniform(0, 22_500, (90, 2)).astype(np.float32)
+    qb = rng.uniform(0, 22_500, (40, 2)).astype(np.float32)
+    qc = rng.uniform(0, 22_500, (25, 2)).astype(np.float32)
+
+    spec = _spec(plan=plan, chunk=32)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    ha = sess.register_queries(qa)
+    hb = sess.register_queries(qb, np.arange(40, dtype=np.int32))
+    assert isinstance(ha, QueryHandle) and ha.count == 90
+
+    def reference(qpos, qid):
+        eng = _engine(spec)
+        return eng.process_tick(pts, qpos, qid)
+
+    # tick 0: A + B
+    r0 = sess.submit().result()
+    ref = reference(np.concatenate([qa, qb]),
+                    np.concatenate([np.full(90, -2, np.int32),
+                                    np.arange(40, dtype=np.int32)]))
+    np.testing.assert_array_equal(r0.nn_idx, ref.nn_idx)
+    np.testing.assert_array_equal(r0.nn_dist, ref.nn_dist)
+
+    # tick 1: drop A -> only B remains (compacted to the front)
+    sess.drop_queries(ha)
+    r1 = sess.submit().result()
+    ref1 = reference(qb, np.arange(40, dtype=np.int32))
+    np.testing.assert_array_equal(r1.nn_idx, ref1.nn_idx)
+    np.testing.assert_array_equal(r1.nn_dist, ref1.nn_dist)
+    assert r1.nn_idx.shape == (40, spec.k)
+
+    # tick 2: register C -> B + C
+    hc = sess.register_queries(qc)
+    h2 = sess.submit()
+    r2 = h2.result()
+    ref2 = reference(np.concatenate([qb, qc]),
+                     np.concatenate([np.arange(40, dtype=np.int32),
+                                     np.full(25, -2, np.int32)]))
+    np.testing.assert_array_equal(r2.nn_idx, ref2.nn_idx)
+    np.testing.assert_array_equal(r2.nn_dist, ref2.nn_dist)
+    # per-handle result slicing via the ownership snapshot
+    ci, cd, cq = h2.result_for(hc)
+    np.testing.assert_array_equal(ci, r2.nn_idx[40:])
+    np.testing.assert_array_equal(cd, r2.nn_dist[40:])
+    assert (cq == -2).all()
+    bi, bd, bq = h2.result_for(hb)
+    np.testing.assert_array_equal(bi, r2.nn_idx[:40])
+    np.testing.assert_array_equal(bq, np.arange(40, dtype=np.int32))
+
+    # dropped handle is dead
+    with pytest.raises(KeyError, match="not live"):
+        sess.update_queries(ha, qa)
+
+
+def test_update_queries_moves_only_that_group():
+    rng = np.random.default_rng(9)
+    pts = rng.uniform(0, 22_500, (400, 2)).astype(np.float32)
+    qa = rng.uniform(0, 22_500, (30, 2)).astype(np.float32)
+    qb = rng.uniform(0, 22_500, (20, 2)).astype(np.float32)
+    spec = _spec()
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    ha = sess.register_queries(qa)
+    hb = sess.register_queries(qb)
+    sess.submit().result()
+    qa2 = np.clip(qa + 50.0, 0, 22_499).astype(np.float32)
+    sess.update_queries(ha, qa2)
+    r = sess.submit().result()
+    ref = _engine(spec).process_tick(pts, np.concatenate([qa2, qb]), None)
+    np.testing.assert_array_equal(r.nn_idx, ref.nn_idx)
+    np.testing.assert_array_equal(r.nn_dist, ref.nn_dist)
+
+
+# --------------------------------------------------- overlapped submit (tent)
+
+def test_two_in_flight_handles_any_collection_order():
+    """Submit τ+1 while τ's results are in flight; collect out of order;
+    every tick bitwise-equal to the blocking reference loop."""
+    w = make_workload(500, "gaussian", seed=2, hotspots=4)
+    qid = np.arange(500, dtype=np.int32)
+    frames = []
+    for _ in range(4):
+        frames.append(w.positions().copy())
+        w.advance()
+
+    spec = _spec()
+    eng = _engine(spec)
+    blocking = [eng.process_tick(p, p, qid) for p in frames]
+
+    sess = KnnSession(spec)
+    sess.ingest_objects(frames[0])
+    hq = sess.register_queries(frames[0], qid)
+    handles = [sess.submit()]
+    for p in frames[1:]:
+        sess.ingest_objects(p)
+        sess.update_queries(hq, p)
+        handles.append(sess.submit())  # up to 2 unmaterialized in flight
+        if len(handles) > 2:
+            handles[-3].result()
+    # collect the tail out of order
+    res = {h.tick: h.result() for h in reversed(handles)}
+    assert sorted(res) == [0, 1, 2, 3]
+    assert [h.tick for h in handles] == [0, 1, 2, 3]
+    for t, ref in enumerate(blocking):
+        np.testing.assert_array_equal(res[t].nn_idx, ref.nn_idx)
+        np.testing.assert_array_equal(res[t].nn_dist, ref.nn_dist)
+        assert res[t].rebuilt == ref.rebuilt
+    # result() is idempotent
+    assert handles[1].result() is res[1]
+    assert handles[0].done()
+
+
+def test_result_of_finalized_tick_leaves_successor_pending():
+    """result(τ) after submit(τ+1) — τ was finalized by the submit — must not
+    finalize (and block on) τ+1; τ+1 stays in flight."""
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 22_500, (200, 2)).astype(np.float32)
+    sess = KnnSession(_spec())
+    sess.ingest_objects(pts)
+    sess.register_queries(pts[:50])
+    ha = sess.submit()
+    hb = sess.submit()  # finalizes ha's bookkeeping
+    ra = ha.result()
+    assert len(sess._pending) == 1 and sess._pending[0] is hb
+    rb = hb.result()
+    assert not sess._pending
+    np.testing.assert_array_equal(ra.nn_idx, rb.nn_idx)  # static state
+
+
+# ------------------------------------------------------- shim equivalence
+
+def test_tick_engine_shim_equivalent_to_session_loop():
+    """TickEngine.run ≡ the manual KnnSession loop, tick for tick, bitwise
+    (results, rebuilt flags, candidate counters)."""
+    cfg = EngineConfig(k=6, th_quad=16, l_max=5, window=32, chunk=64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = TickEngine(cfg)
+    w1 = make_workload(600, "gaussian", seed=2, hotspots=4)
+    engine_res = eng.run(w1, ticks=3)
+
+    sess = KnnSession(ServiceSpec.from_engine(cfg))
+    w2 = make_workload(600, "gaussian", seed=2, hotspots=4)
+    hq = None
+    session_res = []
+    for _ in range(3):
+        qpos, qid = w2.query_batch(1.0)
+        sess.ingest_objects(w2.positions())
+        if hq is None:
+            hq = sess.register_queries(qpos, qid)
+        else:
+            sess.update_queries(hq, qpos)
+        session_res.append(sess.submit().result())
+        w2.advance()
+
+    for re_, rs in zip(engine_res, session_res):
+        np.testing.assert_array_equal(re_.nn_idx, rs.nn_idx)
+        np.testing.assert_array_equal(re_.nn_dist, rs.nn_dist)
+        assert re_.rebuilt == rs.rebuilt
+        assert re_.candidates == rs.candidates
+        assert re_.iterations == rs.iterations
+
+
+def test_tick_engine_warns_deprecation():
+    with pytest.warns(DeprecationWarning, match="KnnSession"):
+        TickEngine(EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=64))
+
+
+# ------------------------------------------------------- compile_s split
+
+def test_compile_time_split_from_wall_time():
+    """First submit of a new shape records compile_s; steady ticks report 0
+    and wall_s excludes the compile entirely."""
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 22_500, (300, 2)).astype(np.float32)
+    # odd geometry -> guaranteed fresh jit cache entry in this process
+    sess = KnnSession(_spec(k=5, window=32, chunk=96))
+    sess.ingest_objects(pts)
+    sess.register_queries(pts[:33])
+    r0 = sess.submit().result()
+    r1 = sess.submit().result()
+    assert r0.compile_s > 0.0
+    assert r1.compile_s == 0.0
+    assert r0.wall_s >= 0.0 and r1.wall_s >= 0.0
+    # the shim surfaces the same split
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = TickEngine(EngineConfig(k=5, th_quad=24, l_max=6, window=32,
+                                      chunk=96))
+    e0 = eng.process_tick(pts, pts[:33], None)
+    e1 = eng.process_tick(pts, pts[:33], None)
+    assert e0.compile_s >= 0.0 and e1.compile_s == 0.0
+
+
+# ------------------------------------------------------- drift rebuild
+
+def test_drift_rebuild_through_delta_path():
+    """Teleporting all objects into one hotspot via update_objects must
+    trigger the partition rebuild and stay exact (paper Sec. 4.1.1)."""
+    n, k = 3000, 16
+    rng = np.random.default_rng(12)
+    uniform = rng.uniform(0, 22_500, (n, 2)).astype(np.float32)
+    clustered = (rng.normal(0, 60, (n, 2)) + 11_250).astype(np.float32).clip(0, 22_499)
+    qid = np.arange(n, dtype=np.int32)
+
+    sess = KnnSession(_spec(k=k, th_quad=32, l_max=6, window=64, chunk=1024,
+                            rebuild_factor=1.5))
+    sess.ingest_objects(uniform)
+    hq = sess.register_queries(uniform, qid)
+    r0 = sess.submit().result()
+    assert r0.rebuilt  # initial build
+    r1 = sess.submit().result()
+    assert not r1.rebuilt
+    sess.update_objects(np.arange(n, dtype=np.int32), clustered)
+    sess.update_queries(hq, clustered)
+    r2 = sess.submit().result()
+    assert r2.rebuilt, (r2.candidates, r1.candidates)
+    bi, bd = knn_bruteforce_chunked(clustered, clustered, qid, k=k, chunk=1024)
+    np.testing.assert_allclose(r2.nn_dist, bd, rtol=1e-5, atol=1e-3)
+
+
+def test_update_objects_duplicate_ids_last_wins():
+    """Several observations for one object in one delta batch resolve
+    deterministically to the LAST one (≡ applying them in order)."""
+    rng = np.random.default_rng(6)
+    pts = rng.uniform(0, 22_500, (300, 2)).astype(np.float32)
+    spec = _spec()
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(pts, np.arange(300, dtype=np.int32))
+    sess.submit().result()
+    ids = np.array([7, 7, 12, 7, 12], np.int32)
+    upd = rng.uniform(0, 22_500, (5, 2)).astype(np.float32)
+    sess.update_objects(ids, upd)
+    expect = pts.copy()
+    expect[7], expect[12] = upd[3], upd[4]  # last observation per id
+    r = sess.submit().result()
+    ref = _engine(spec)
+    ref.process_tick(pts, pts, np.arange(300, dtype=np.int32))
+    ref_r = ref.process_tick(expect, pts, np.arange(300, dtype=np.int32))
+    np.testing.assert_array_equal(r.nn_idx, ref_r.nn_idx)
+    np.testing.assert_array_equal(r.nn_dist, ref_r.nn_dist)
+
+
+# ------------------------------------------------------- error surface
+
+def test_session_error_surface():
+    sess = KnnSession(_spec())
+    with pytest.raises(RuntimeError, match="ingest_objects"):
+        sess.update_objects([0], [[1.0, 1.0]])
+    with pytest.raises(RuntimeError, match="no object state"):
+        sess.submit()
+    pts = np.random.default_rng(0).uniform(0, 22_500, (100, 2)).astype(np.float32)
+    sess.ingest_objects(pts)
+    with pytest.raises(RuntimeError, match="empty query registry"):
+        sess.submit()
+    with pytest.raises(ValueError, match="empty query group"):
+        sess.register_queries(np.zeros((0, 2), np.float32))
+    h = sess.register_queries(pts[:10])
+    with pytest.raises(ValueError, match="10 rows"):
+        sess.update_queries(h, pts[:5])
+    with pytest.raises(ValueError, match="out of range"):
+        sess.update_objects([100], [[1.0, 1.0]])
+    with pytest.raises(ValueError, match="ids vs"):
+        sess.update_objects([1, 2], [[1.0, 1.0]])
+    with pytest.raises(ValueError, match="qid has"):
+        sess.register_queries(pts[:4], np.arange(3, dtype=np.int32))
+    sess.drop_queries(h)
+    with pytest.raises(KeyError):
+        sess.drop_queries(h)
+    sess.set_queries(pts[:8])
+    assert sess.query_count == 8
+
+
+# -------------------------------------------- forced 8-device mesh (real XLA)
+
+def test_session_parity_on_forced_8_device_mesh():
+    """The acceptance criterion on real multi-device XLA: delta ingest +
+    overlapped submit through KnnSession is bit-identical to the snapshot
+    TickEngine path under BOTH plans on an 8-device host mesh, all three
+    workload families.  Subprocess: device count must precede jax init."""
+    code = r"""
+import os, warnings
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.api import KnnSession, ServiceSpec
+from repro.core import EngineConfig, TickEngine
+from repro.data import make_workload
+
+for plan in ("single", "sharded"):
+    for dist in ("uniform", "gaussian", "network"):
+        spec = ServiceSpec(k=4, th_quad=16, l_max=5, window=32, chunk=32,
+                           plan=plan, mesh_shape=8 if plan == "sharded" else None,
+                           delta_pad=64)
+        w = make_workload(400, dist, seed=5)
+        frames = []
+        for _ in range(3):
+            frames.append(w.positions().copy()); w.advance()
+        qid = np.arange(400, dtype=np.int32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = TickEngine(spec.engine_config())
+        ref = [eng.process_tick(p, p, qid) for p in frames]
+
+        sess = KnnSession(spec)
+        sess.ingest_objects(frames[0])
+        hq = sess.register_queries(frames[0], qid)
+        handles, prev = [], None
+        for t, p in enumerate(frames):
+            if t > 0:
+                moved = np.nonzero((p != frames[t-1]).any(1))[0].astype(np.int32)
+                sess.update_objects(moved, p[moved])
+                sess.update_queries(hq, p)
+            handles.append(sess.submit())  # overlapped: result lags one tick
+        for h, r in zip(handles, ref):
+            got = h.result()
+            np.testing.assert_array_equal(got.nn_idx, r.nn_idx)
+            np.testing.assert_array_equal(got.nn_dist, r.nn_dist)
+            assert got.rebuilt == r.rebuilt
+print("SESSION_8DEV_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)  # the child pins its own device count
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "SESSION_8DEV_OK" in r.stdout

@@ -46,6 +46,20 @@ def test_unknown_plan_rejected():
         resolve_plan("nope")
 
 
+def test_executor_resolve_plan_is_plan_resolve_plan():
+    """core.executor re-exports the canonical plan resolver as the SAME
+    function object (a documented alias, not a divergent wrapper)."""
+    from repro.core import executor as executor_mod
+    from repro.core import plan as plan_mod
+
+    assert executor_mod.resolve_plan is plan_mod.resolve_plan
+    for name in ("single", "sharded"):
+        a = executor_mod.resolve_plan(name, num_devices=1)
+        b = plan_mod.resolve_plan(name, num_devices=1)
+        assert a == b
+    assert executor_mod.resolve_plan(None) == plan_mod.resolve_plan(None)
+
+
 def test_resolve_plan_defaults():
     assert resolve_plan(None) == SinglePlan()
     assert resolve_plan("single") == SinglePlan()
