@@ -8,15 +8,19 @@ object and query state; queries are registered ONCE and moved in place,
 object motion streams in as delta scatters (``--ingest delta``) or full
 snapshots (``--ingest snapshot``), and ``--overlap`` submits tick τ+1 while
 τ's results are still in flight (the paper's CPU/GPU pipeline overlap).
-Runs on either execution plan: ``single`` (one device) or ``sharded`` (the
-1-D ``("query",)`` mesh, DESIGN.md §10).
+Runs on any execution plan: ``single`` (one device), ``sharded`` (the 1-D
+``("query",)`` mesh, DESIGN.md §10), ``object_sharded`` (the 1-D
+``("object",)`` mesh: Morton-sliced objects, per-device quadtrees,
+merge-reduced lists, DESIGN.md §12) or ``hybrid`` (the 2-D
+``("query", "object")`` mesh; pick the factorization with ``--mesh QxO``).
 
   PYTHONPATH=src python examples/moving_objects_service.py \
-      [--objects N] [--ticks T] [--plan single|sharded] [--devices D] \
-      [--ingest snapshot|delta] [--overlap]
+      [--objects N] [--ticks T] \
+      [--plan single|sharded|object_sharded|hybrid] [--devices D] \
+      [--mesh QxO] [--ingest snapshot|delta] [--overlap]
 
 ``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
-initializes, so the sharded plan runs on a real D-device mesh without
+initializes, so the mesh plans run on a real D-device mesh without
 accelerators.
 """
 import argparse
@@ -38,11 +42,15 @@ def _parse_args():
     ap.add_argument("--backend", default="dense_topk",
                     help="SCAN-step selection backend (validated eagerly by "
                          "ServiceSpec against the executor registry)")
-    ap.add_argument("--plan", default="single", choices=["single", "sharded"],
+    ap.add_argument("--plan", default="single",
+                    choices=["single", "sharded", "object_sharded", "hybrid"],
                     help="execution plan (plan registry)")
     ap.add_argument("--devices", type=int, default=None,
-                    help="mesh size on the ('query',) axis; on CPU also "
-                         "forces that many host devices (set before jax init)")
+                    help="devices on the plan's 1-D mesh; on CPU also forces "
+                         "that many host devices (set before jax init)")
+    ap.add_argument("--mesh", default=None, metavar="QxO",
+                    help="hybrid mesh shape, e.g. 2x4 (query x object "
+                         "devices); default: most balanced factorization")
     ap.add_argument("--chunk", type=int, default=8192,
                     help="query chunk rows; batches pad to devices*chunk, so "
                          "use a small chunk for small smoke runs")
@@ -58,6 +66,16 @@ def _parse_args():
 
 def main():
     args = _parse_args()
+
+    mesh_shape = args.devices
+    if args.mesh:
+        try:
+            q, o = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh must look like 2x4, got {args.mesh!r}")
+        mesh_shape = (q, o)
+        if args.devices is None:
+            args.devices = q * o
 
     # the device count must be pinned before the first jax import
     if args.devices and args.devices > 1:
@@ -76,7 +94,7 @@ def main():
         spec = ServiceSpec(k=args.k, th_quad=384, l_max=8,
                            window=min(256, args.chunk), chunk=args.chunk,
                            backend=args.backend, plan=args.plan,
-                           mesh_shape=args.devices)
+                           mesh_shape=mesh_shape)
     except ValueError as e:  # eager validation lists the registries
         raise SystemExit(str(e))
 

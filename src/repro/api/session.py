@@ -16,6 +16,10 @@ speaks exactly that language:
   (:func:`repro.core.ticks.scatter_positions`; functional, so an in-flight
   tick keeps reading the previous buffer — double-buffering);
   ``ingest_objects`` keeps the full-snapshot upload as the fallback path.
+  Under the object-sharded plans (DESIGN.md §12) the batch is grouped by
+  owning shard, device-side — Morton rank // ``ceil(N/R)``, re-derived from
+  the live index (``object_shards`` / ``core.ticks.route_delta``) — staging
+  the contiguous-run layout a per-shard-resident buffer scatters directly.
 * **Overlapped ticks** — ``submit()`` stages + dispatches one tick and
   returns a :class:`~repro.api.handles.TickHandle` immediately; ``result()``
   materializes lazily.  Submitting tick τ+1 while τ's ``(Q, k)`` results are
@@ -45,7 +49,12 @@ from repro.core.executor import resolve_executor
 from repro.core.pipeline import default_max_nav
 from repro.core.plan import pad_capacity, pad_queries, resolve_plan
 from repro.core.quadtree import build_index
-from repro.core.ticks import _tick_step, scatter_positions
+from repro.core.ticks import (
+    _tick_step,
+    object_shard_of,
+    route_delta,
+    scatter_positions,
+)
 
 from .handles import QueryHandle, TickHandle
 from .spec import ServiceSpec
@@ -270,9 +279,49 @@ class KnnSession:
             positions = np.concatenate(
                 [positions, np.zeros((pad, 2), np.float32)]
             )
-        self._positions = scatter_positions(
-            self._positions, jnp.asarray(ids), jnp.asarray(positions)
-        )
+        ids_dev, pos_dev = jnp.asarray(ids), jnp.asarray(positions)
+        if self.plan.object_axis_size > 1 and self._index is not None:
+            # object-sharded plans: group the batch by owning shard (the
+            # Morton-rank rule, DESIGN.md §12) — entirely device-side
+            # (core/ticks.py::route_delta), so staging stays async.  A pure
+            # reordering of now-unique ids: the scattered buffer, and hence
+            # every result, is bit-identical (pinned by the routing-edge
+            # regressions in tests/test_api.py).
+            ids_dev, pos_dev = route_delta(
+                self._index, ids_dev, pos_dev, self.plan.object_axis_size
+            )
+        self._positions = scatter_positions(self._positions, ids_dev, pos_dev)
+
+    def object_shards(self, ids) -> np.ndarray:
+        """Owning object shard per object id under the live plan + index.
+
+        Evaluates the shard-ownership rule (DESIGN.md §12: Morton rank //
+        ``ceil(N / R)``) against the *current* index — objects change owner
+        as they move through the Morton order, so the answer is only valid
+        until the next tick's reindex.  Plans without an object axis own
+        everything on shard 0.  Requires a built index (the rule is defined
+        by the index's Morton order): before the first submit the partition
+        does not exist yet.
+        """
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        r = self.plan.object_axis_size
+        if r == 1:
+            return np.zeros(ids.shape, np.int32)
+        if self._index is None:
+            raise RuntimeError(
+                "object_shards before the first submit: the index (and with "
+                "it the Morton shard ownership) is built lazily at submit()"
+            )
+        n = self._index.n_objects
+        if ids.size and ((ids < 0).any() or (ids >= n).any()):
+            # jnp's clamping gather would return confidently wrong owners
+            # for ids the (possibly stale) index has never seen
+            bad = ids[(ids < 0) | (ids >= n)]
+            raise ValueError(
+                f"object_shards: ids outside the live index's [0, {n}): "
+                f"{bad[:8]}"
+            )
+        return np.asarray(object_shard_of(self._index, ids, r))
 
     # ------------------------------------------------------------ query state
     def register_queries(self, qpos, qid=None) -> QueryHandle:

@@ -40,7 +40,9 @@ class ServiceSpec:
     region_pad: float = 1e-3
     backend: str = "dense_topk"
     plan: str = "single"
-    mesh_shape: int | None = None
+    # int for the 1-D plans (sharded / object_sharded), (query, object) pair
+    # for hybrid, None = all devices (hybrid: most balanced factorization)
+    mesh_shape: int | tuple[int, int] | None = None
     max_iters: int = 100_000
     origin: tuple[float, float] = (0.0, 0.0)
     side: float = SIDE_DEFAULT

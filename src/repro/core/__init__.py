@@ -12,11 +12,14 @@ from .kselect import find_kdist
 from .pipeline import KnnStats, knn_query_batch
 from .plan import (
     ExecutionPlan,
+    HybridPlan,
+    ObjectShardedPlan,
     ShardedPlan,
     SinglePlan,
     knn_chunked_device,
     knn_query_batch_chunked,
     knn_sharded_device,
+    object_shard_capacity,
     pad_capacity,
     pad_queries,
     run_plan_device,
@@ -26,6 +29,7 @@ from .ticks import (
     EngineConfig,
     TickEngine,
     TickResult,
+    object_shard_of,
     scatter_positions,
     validate_engine_params,
 )
@@ -45,6 +49,8 @@ __all__ = [
     "knn_query_batch",
     "knn_query_batch_chunked",
     "knn_sharded_device",
+    "object_shard_capacity",
+    "object_shard_of",
     "pad_capacity",
     "pad_queries",
     "run_plan_device",
@@ -53,6 +59,8 @@ __all__ = [
     "ExecutionPlan",
     "SinglePlan",
     "ShardedPlan",
+    "ObjectShardedPlan",
+    "HybridPlan",
     "QuadtreeIndex",
     "build_index",
     "leaf_of_points",

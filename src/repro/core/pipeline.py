@@ -36,7 +36,12 @@ Invariants that make block-skipping sound (proved in tests):
   * cursors ``cl``/``cr`` always sit on leaf boundaries;
   * an aligned block that starts (ends) on a leaf boundary is a union of whole
     leaves, hence skippable as a unit;
-  * the k-th distance is non-increasing, so a once-far block stays prunable.
+  * the k-th distance is non-increasing, so a once-far block stays prunable;
+  * pruning keeps equal-distance blocks (``<=``/``>`` comparisons) and every
+    selection step is lexicographic by ``(d2, id)``, so the final list is the
+    unique canonical k-NN answer — independent of scan order, chunk
+    boundaries, query sharding AND object partition (DESIGN.md §12; this is
+    what lets the object-sharded plans merge per-shard lists bit-exactly).
 """
 from __future__ import annotations
 
@@ -113,7 +118,12 @@ def _nav_step(index: QuadtreeIndex, qx, qy, kth2, cursor, run, dir_r):
     leaf_d2 = morton.point_to_block_dist2(
         qx, qy, leaf_key, a0, index.origin, index.side, l_max
     )
-    found = run & ~exhausted & (cnt > 0) & (leaf_d2 < kth2)
+    # `<=`, not `<`: leaves whose box sits EXACTLY at the k-th distance are
+    # scanned, so every candidate tied at the k-th distance enters selection.
+    # Together with the lexicographic (d2, id) selection contract (DESIGN.md
+    # §12) this makes the result a pure function of the candidate set —
+    # identical bits under any chunking, query sharding or object partition.
+    found = run & ~exhausted & (cnt > 0) & (leaf_d2 <= kth2)
 
     # --- far/empty aligned-block skip: pick the largest admissible jump.
     pyr_n = index.pyramid.shape[0]
@@ -130,7 +140,7 @@ def _nav_step(index: QuadtreeIndex, qx, qy, kth2, cursor, run, dir_r):
             morton.point_to_block_dist2(
                 qx, qy, code, ai, index.origin, index.side, l_max
             )
-            >= kth2
+            > kth2  # strict: blocks AT the k-th distance still get scanned
         )
         aligned = (cursor & (blk - 1)) == 0
         ok = aligned & in_dom & (ai >= a0) & (empty | far)
@@ -206,7 +216,9 @@ def _knn_sorted_impl(
         # narrow gathers beat one wide one here (EXPERIMENTS.md §Perf, P4)
         cpos = index.pos[idxc]  # (Q, W, 2)
         cids = index.ids[idxc]
-        valid = in_window & (cids != qid[:, None])
+        # negative ids are sentinels: -2 external queries, -1 the padding rows
+        # the object-sharded plans append to even out shard slices
+        valid = in_window & (cids != qid[:, None]) & (cids >= 0)
         # distance + k-selection merge: dispatched to the registered backend
         # (result lists stay ascending; linear layout of Fig. 1)
         best_d, best_i = executor.scan_merge(

@@ -19,15 +19,46 @@ plans ship:
     contiguous shards with ``shard_map``, each device runs the identical
     masked dense iteration locally over its shard, and the per-shard
     ``(k, dist, id)`` lists are gathered by concatenation (query shards are
-    disjoint, so the gather needs no merge; the merge primitive
-    ``kernels/merge_topk.py`` is the reduction step reserved for the future
-    object-sharded plan).  The drift statistic is ``psum``-reduced over the
-    mesh so the serving layer's rebuild trigger sees the whole tick's volume.
+    disjoint, so the gather needs no merge).  The drift statistic is
+    ``psum``-reduced over the mesh so the serving layer's rebuild trigger
+    sees the whole tick's volume.
 
-Because every shard boundary coincides with a chunk boundary (the host pads
-the batch to ``num_devices * chunk``), the per-chunk programs are identical to
-the single-device plan's — sharded results are **bit-identical** to ``single``
-(pinned by tests/test_plan.py across all three workload families).
+``object_sharded``
+    A 1-D ``("object",)`` mesh (``launch.mesh.make_object_mesh``, DESIGN.md
+    §12): the **object set** is split into Morton-contiguous equal-count
+    slices (the Morton-sorted object array of the global index, reshaped;
+    the tail slice padded with sentinel id -1 rows that the scan masks out),
+    each device builds its own quadtree over its slice and runs the full
+    query batch against it locally, and the per-device *partial* result
+    lists are ``all_gather``-ed along the object axis and reduced with a
+    binary tree of the MERGE backends (``kernels.ops.tree_merge_lists`` over
+    ``dense_merge`` | ``fused_merge``).  This is the partition-then-merge
+    route to object sets larger than one device's memory (Gowanlock's
+    hybrid KNN-join, PAPERS.md).
+
+``hybrid``
+    The 2-D ``("query", "object")`` mesh composing both decompositions
+    (``launch.mesh.make_spatial_mesh``): the Morton-sorted query batch
+    splits along the query axis, the Morton-sorted object array along the
+    object axis; each device sweeps its query shard over its object slice,
+    partial lists merge-reduce along the object axis and gather by
+    concatenation along the query axis.  ``mesh_shape=(qd, od)`` picks the
+    factorization; the default is the most balanced one
+    (``launch.mesh.default_hybrid_shape``).
+
+ALL plans are **bit-identical** to ``single`` (pinned by tests/test_plan.py
+and the property harness tests/test_properties.py across the full
+backend × plan matrix).  Two disciplines make that hold:
+
+  * every query-shard boundary coincides with a chunk boundary — the host
+    pads the batch to ``(query devices) * chunk`` (:func:`pad_queries`), so
+    per-chunk programs are identical to the single plan's;
+  * selection is everywhere the canonical lexicographic ``(d2, id)`` order
+    and navigation keeps equal-distance blocks (DESIGN.md §12), so a
+    query's result is a pure function of the candidate *set* — any object
+    partition yields the same bits after the merge reduction (the
+    composition law ``knn(∪ P_r) = tree_merge(knn(P_r))``, contract-tested
+    R-way in tests/test_kernels.py).
 
 Plans are frozen (hence hashable) dataclasses, carried through ``jax.jit`` as
 *static* arguments exactly like :class:`repro.core.executor.QueryExecutor`:
@@ -43,7 +74,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import SPATIAL_RULES, shard_map_compat, use_rules
-from repro.launch.mesh import make_query_mesh
+from repro.kernels.ops import tree_merge_lists
+from repro.launch.mesh import (
+    default_hybrid_shape,
+    make_object_mesh,
+    make_query_mesh,
+    make_spatial_mesh,
+)
 
 from .pipeline import (
     KnnStats,
@@ -51,17 +88,20 @@ from .pipeline import (
     _resolve_max_nav,
     _sort_unsort,
 )
-from .quadtree import QuadtreeIndex
+from .quadtree import QuadtreeIndex, build_index
 
 __all__ = [
     "ExecutionPlan",
     "SinglePlan",
     "ShardedPlan",
+    "ObjectShardedPlan",
+    "HybridPlan",
     "register_plan",
     "resolve_plan",
     "plan_names",
     "pad_capacity",
     "pad_queries",
+    "object_shard_capacity",
     "knn_chunked_device",
     "knn_sharded_device",
     "knn_query_batch_chunked",
@@ -105,6 +145,122 @@ def pad_queries(qpos, qid, multiple: int):
     return qpos, qid
 
 
+def object_shard_capacity(n_objects: int, num_shards: int) -> int:
+    """Rows per object shard: ``ceil(N / R)`` — THE shard-ownership rule.
+
+    The object-sharded plans slice the Morton-sorted object array into
+    ``num_shards`` consecutive slices of this capacity (the last one padded
+    with sentinel id -1 rows).  An object's owning shard is therefore its
+    Morton *rank* divided by this capacity — equal object counts per shard
+    regardless of skew, Morton-contiguous so each local quadtree covers a
+    compact region.  ``repro.core.ticks.object_shard_of`` evaluates the rule
+    device-side for delta-ingest routing.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return -(-max(1, n_objects) // num_shards)
+
+
+def _pad_object_slices(index: QuadtreeIndex, num_shards: int):
+    """Morton-sorted (pos, gids) padded so every shard slice is equal-size.
+
+    Padding rows clone the last object's position (staying at the tail of the
+    Morton order, so slices remain Morton-contiguous) with sentinel id -1 —
+    the scan's validity mask drops them, so they can never enter a result
+    list (they only inflate the padded shard's candidate statistic).
+
+    Built by static-slice scatter (``.at[:n].set``), NOT ``jnp.concatenate``:
+    on jax 0.4.x, a concatenate produced inside the enclosing jit and fed to
+    the fully-manual shard_map fallback over a 2-D mesh is mis-partitioned by
+    GSPMD — devices receive garbage slices (bit-parity caught it on the
+    forced 8-device grid; eager mode and 1-D meshes are unaffected).
+    """
+    n = index.n_objects
+    cap = object_shard_capacity(n, num_shards)
+    pad = num_shards * cap - n
+    if not pad:
+        return index.pos, index.ids
+    opos = (
+        jnp.zeros((n + pad, 2), index.pos.dtype)
+        .at[:n].set(index.pos)
+        .at[n:].set(index.pos[-1])
+    )
+    oids = jnp.full((n + pad,), -1, jnp.int32).at[:n].set(index.ids)
+    return opos, oids
+
+
+def _local_index(opos, oids, origin, side, *, l_max, th_quad):
+    """A shard-local quadtree over one Morton-contiguous object slice.
+
+    Built with the *global* region geometry (origin/side/l_max), so Morton
+    codes — and hence query sort order and navigation arithmetic — agree
+    with every other shard and with the single plan.  ``build_index``
+    assigns ids by sort position within its input; they are remapped through
+    ``oids`` back to global object ids so result lists and the qid
+    self-exclusion are partition-invariant.
+    """
+    local = build_index(opos, origin, side, l_max=l_max, th_quad=th_quad)
+    return dataclasses.replace(local, ids=oids[local.ids])
+
+
+def _object_local_merge(origin, side, opos, oids, qp, qi, *, num_shards,
+                        l_max, th_quad, k, window, chunk, max_nav, max_iters,
+                        executor, merge, axis_names):
+    """Device-local body shared by object_sharded and hybrid (inside shard_map).
+
+    Carves the device's own Morton-contiguous object slice out of the padded
+    (replicated) object arrays by its ``"object"`` axis index, builds the
+    local quadtree over just that slice, sweeps the (replicated or
+    query-sharded) batch over it, then reduces the per-shard partial lists
+    across the ``object`` mesh axis: ``all_gather`` of the (Q_local, k)
+    lists — O(R·Q·k), list-sized, never candidate-sized — followed by a
+    local binary ``tree_merge_lists`` with the selected MERGE backend.
+    Every device along the object axis computes the identical merged list
+    (the reduction is deterministic), so the output is replicated on that
+    axis.  Stats are ``psum``-reduced over all mesh axes so the drift
+    trigger sees whole-tick volume.
+
+    ``origin``/``side`` arrive as explicit (replicated) operands, not a
+    closure — shard_map bodies must not capture traced values.
+
+    Two jax-0.4.x fallback-shard_map miscompiles shape this body (both
+    caught by the bit-parity harness on the forced 8-device grid; newer jax
+    and eager mode are unaffected, and the workarounds are semantically
+    neutral there):
+
+    * object arrays enter REPLICATED and each device slices locally
+      (``axis_index`` + ``dynamic_slice``) — an in_spec that splits a value
+      computed inside the enclosing jit along the object axis hands some
+      devices garbage slices;
+    * outputs leave TILED over every mesh axis, never spec'd as replicated —
+      an out_spec that omits a mesh axis of a 2-D mesh assembles garbage
+      from the "replicated" dim.  The caller keeps replica 0
+      (:func:`_take_replica0`).
+    """
+    r = jax.lax.axis_index("object")
+    size = opos.shape[0] // num_shards  # static rows per shard (padded)
+    opos_l = jax.lax.dynamic_slice_in_dim(opos, r * size, size, 0)
+    oids_l = jax.lax.dynamic_slice_in_dim(oids, r * size, size, 0)
+    local = _local_index(opos_l, oids_l, origin, side,
+                         l_max=l_max, th_quad=th_quad)
+    idx_l, d2_l, st = _chunked_sweep(
+        local, qp, qi, k=k, window=window, chunk=chunk,
+        max_nav=max_nav, max_iters=max_iters, executor=executor,
+    )
+    d2_all = jax.lax.all_gather(d2_l, "object")  # (R, Q_local, k)
+    idx_all = jax.lax.all_gather(idx_l, "object")
+    d2_m, idx_m = tree_merge_lists(d2_all, idx_all, k=k, merge=merge)
+    st = KnnStats(*(jax.lax.psum(x, axis_names).reshape(1) for x in st))
+    return idx_m, d2_m, st
+
+
+def _take_replica0(x, n_replicas: int):
+    """(n_replicas * Q, ...) tiled output -> one replica's (Q, ...) rows."""
+    if n_replicas == 1:
+        return x
+    return x.reshape((n_replicas, x.shape[0] // n_replicas) + x.shape[1:])[0]
+
+
 def _chunked_sweep(index, qpos_s, qid_s, *, k, window, chunk, max_nav,
                    max_iters, executor):
     """``lax.map`` of the sorted-query program over fixed-shape chunks.
@@ -139,6 +295,15 @@ class ExecutionPlan:
     """Interface: device layout of one tick's query sweep (see module doc)."""
 
     name: ClassVar[str]
+
+    @property
+    def object_axis_size(self) -> int:
+        """Shards on the object axis (1 = objects unsharded).
+
+        The serving layer reads this to route delta updates to the owning
+        shard (``repro.core.ticks.object_shard_of``; DESIGN.md §12).
+        """
+        return 1
 
     def pad_multiple(self, chunk: int) -> int:
         """Host-side padding granularity for :func:`pad_queries`."""
@@ -237,6 +402,180 @@ class ShardedPlan(ExecutionPlan):
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class ObjectShardedPlan(ExecutionPlan):
+    """Morton-sliced objects, one local quadtree per device, merge-reduced.
+
+    The inverse decomposition of :class:`ShardedPlan`: the query batch is
+    *replicated* across the 1-D ``("object",)`` mesh while each device owns
+    ``ceil(N / R)`` Morton-contiguous objects and a quadtree over just its
+    slice — per-device object state shrinks by R, which is what scales the
+    *object* axis past one device's memory (the paper's massive datasets).
+    The per-query partial lists reduce across the mesh with a binary tree of
+    ``merge`` (a MERGE backend name; DESIGN.md §12).
+    """
+
+    num_devices: int
+    merge: str = "dense_merge"
+    name: ClassVar[str] = "object_sharded"
+
+    def __post_init__(self):
+        if self.num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {self.num_devices}")
+
+    @property
+    def object_axis_size(self) -> int:
+        return self.num_devices
+
+    def pad_multiple(self, chunk: int) -> int:
+        # queries are replicated, not split: single-plan granularity
+        return chunk
+
+    def run(self, index, qpos, qid, *, k, window, chunk, max_nav, max_iters,
+            executor):
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_object_mesh(self.num_devices)
+        with use_rules(mesh, SPATIAL_RULES) as rules:
+            out2_spec = rules.spec(("object", None))  # tiled outputs
+            out1_spec = rules.spec(("object",))
+        repl_spec = P()
+
+        order, inv = _sort_unsort(index, qpos)
+        qpos_s, qid_s = qpos[order], qid[order]
+        opos, oids = _pad_object_slices(index, self.num_devices)
+
+        def device_local(origin, side, opos_r, oids_r, qp, qi):
+            return _object_local_merge(
+                origin, side, opos_r, oids_r, qp, qi,
+                num_shards=self.num_devices,
+                l_max=index.l_max, th_quad=index.th_quad, k=k, window=window,
+                chunk=chunk, max_nav=max_nav, max_iters=max_iters,
+                executor=executor, merge=self.merge, axis_names="object",
+            )
+
+        # object arrays enter replicated (devices self-slice by axis index),
+        # outputs leave tiled over the object axis (replica-major); see
+        # _object_local_merge for why nothing else is spec'd
+        sharded = shard_map_compat(
+            device_local,
+            mesh=mesh,
+            in_specs=(repl_spec, repl_spec, repl_spec, repl_spec, repl_spec,
+                      repl_spec),
+            out_specs=(out2_spec, out2_spec,
+                       KnnStats(out1_spec, out1_spec, out1_spec)),
+            axis_names={"object"},
+            check_vma=False,
+        )
+        idx_t, d2_t, st_t = sharded(
+            index.origin, index.side, opos, oids, qpos_s, qid_s
+        )
+        idx_s = _take_replica0(idx_t, self.num_devices)
+        d2_s = _take_replica0(d2_t, self.num_devices)
+        stats = KnnStats(*(x[0] for x in st_t))
+        return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+    def describe(self) -> str:
+        return (
+            f"plan=object_sharded mesh=({self.num_devices},) axes=('object',) "
+            f"devices={self.num_devices} merge={self.merge}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridPlan(ExecutionPlan):
+    """2-D ``("query", "object")`` mesh: both decompositions composed.
+
+    Device ``(i, j)`` sweeps query shard ``i`` over object slice ``j``;
+    results merge-reduce along the object axis (identical on every device of
+    a query row) and gather by concatenation along the query axis.  The
+    query padding granularity is ``query_devices * chunk`` — object slicing
+    needs no query-side padding (DESIGN.md §12).
+    """
+
+    query_devices: int
+    object_devices: int
+    merge: str = "dense_merge"
+    name: ClassVar[str] = "hybrid"
+
+    def __post_init__(self):
+        if self.query_devices < 1 or self.object_devices < 1:
+            raise ValueError(
+                "mesh_shape axes must be >= 1, got "
+                f"({self.query_devices}, {self.object_devices})"
+            )
+
+    @property
+    def object_axis_size(self) -> int:
+        return self.object_devices
+
+    def pad_multiple(self, chunk: int) -> int:
+        # every query shard must be a whole number of chunks
+        return self.query_devices * chunk
+
+    def run(self, index, qpos, qid, *, k, window, chunk, max_nav, max_iters,
+            executor):
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_spatial_mesh(self.query_devices, self.object_devices)
+        with use_rules(mesh, SPATIAL_RULES) as rules:
+            qpos_spec = rules.spec(("query", None))
+            qvec_spec = rules.spec(("query",))
+        repl_spec = P()
+        # outputs tiled over BOTH axes — query-major, object as the inner
+        # (replica) block; see _object_local_merge for why
+        out2_spec = P(("query", "object"), None)
+        out1_spec = P(("query", "object"))
+
+        order, inv = _sort_unsort(index, qpos)
+        qpos_s, qid_s = qpos[order], qid[order]
+        opos, oids = _pad_object_slices(index, self.object_devices)
+
+        def device_local(origin, side, opos_r, oids_r, qp, qi):
+            return _object_local_merge(
+                origin, side, opos_r, oids_r, qp, qi,
+                num_shards=self.object_devices,
+                l_max=index.l_max, th_quad=index.th_quad, k=k, window=window,
+                chunk=chunk, max_nav=max_nav, max_iters=max_iters,
+                executor=executor, merge=self.merge,
+                axis_names=("query", "object"),
+            )
+
+        sharded = shard_map_compat(
+            device_local,
+            mesh=mesh,
+            in_specs=(repl_spec, repl_spec, repl_spec, repl_spec, qpos_spec,
+                      qvec_spec),
+            out_specs=(out2_spec, out2_spec,
+                       KnnStats(out1_spec, out1_spec, out1_spec)),
+            axis_names={"query", "object"},
+            check_vma=False,
+        )
+        idx_t, d2_t, st_t = sharded(
+            index.origin, index.side, opos, oids, qpos_s, qid_s
+        )
+        nq, od = qpos.shape[0], self.object_devices
+        qq = nq // self.query_devices  # rows per query shard
+
+        def dereplicate(x):
+            # (qdev * od * qq, k) -> drop the inner object-replica block
+            return x.reshape((self.query_devices, od, qq) + x.shape[1:])[
+                :, 0
+            ].reshape((nq,) + x.shape[1:])
+
+        idx_s, d2_s = dereplicate(idx_t), dereplicate(d2_t)
+        stats = KnnStats(*(x[0] for x in st_t))
+        return idx_s[inv], jnp.sqrt(d2_s[inv]), stats
+
+    def describe(self) -> str:
+        return (
+            f"plan=hybrid mesh=({self.query_devices}, {self.object_devices}) "
+            f"axes=('query', 'object') "
+            f"devices={self.query_devices * self.object_devices} "
+            f"merge={self.merge}"
+        )
+
+
 # --------------------------------------------------------------------------
 # plan registry — serving/benchmarks/examples select a plan by name
 # --------------------------------------------------------------------------
@@ -265,17 +604,47 @@ def _make_single(num_devices=None) -> SinglePlan:
     return SinglePlan()
 
 
+def _as_1d(name: str, num_devices) -> int:
+    if num_devices is None:
+        return jax.device_count()
+    if isinstance(num_devices, (tuple, list)):
+        raise ValueError(
+            f"plan {name!r} lays a 1-D mesh; mesh_shape must be an int, "
+            f"got {tuple(num_devices)!r} (use plan='hybrid' for 2-D shapes)"
+        )
+    return int(num_devices)
+
+
 @register_plan("sharded")
 def _make_sharded(num_devices=None) -> ShardedPlan:
-    n = jax.device_count() if num_devices is None else int(num_devices)
-    return ShardedPlan(num_devices=n)
+    return ShardedPlan(num_devices=_as_1d("sharded", num_devices))
+
+
+@register_plan("object_sharded")
+def _make_object_sharded(num_devices=None) -> ObjectShardedPlan:
+    return ObjectShardedPlan(num_devices=_as_1d("object_sharded", num_devices))
+
+
+@register_plan("hybrid")
+def _make_hybrid(num_devices=None) -> HybridPlan:
+    if isinstance(num_devices, (tuple, list)):
+        if len(num_devices) != 2:
+            raise ValueError(
+                f"hybrid mesh_shape must be (query, object), got {num_devices!r}"
+            )
+        q, o = (int(x) for x in num_devices)
+    else:
+        q, o = default_hybrid_shape(num_devices)
+    return HybridPlan(query_devices=q, object_devices=o)
 
 
 def resolve_plan(plan, *, num_devices=None) -> ExecutionPlan:
     """Name | ExecutionPlan | None -> ExecutionPlan (default: single).
 
-    ``num_devices`` parameterizes named plans (``EngineConfig.mesh_shape``);
-    for ``sharded`` it defaults to every visible device.
+    ``num_devices`` parameterizes named plans (``EngineConfig.mesh_shape``):
+    an int for the 1-D plans (``sharded`` / ``object_sharded``, default every
+    visible device) or a ``(query, object)`` pair for ``hybrid`` (default the
+    most balanced factorization of the device count).
     """
     if plan is None:
         return SinglePlan()

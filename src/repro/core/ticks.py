@@ -35,10 +35,15 @@ scalar together with the results.
 
 The SCAN backend is configurable per engine (``EngineConfig.backend``; see
 ``repro.core.executor.available_backends``), and so is the device layout of
-the query sweep (``EngineConfig.plan`` / ``mesh_shape``; DESIGN.md §10): the
-``sharded`` plan replicates the index across a 1-D ``("query",)`` mesh and
-splits the Morton-sorted batch with ``shard_map``, its drift statistic coming
-back ``psum``-reduced so the rebuild trigger sees the whole tick's volume.
+the query sweep (``EngineConfig.plan`` / ``mesh_shape``; DESIGN.md §10/§12):
+``sharded`` replicates the index across a 1-D ``("query",)`` mesh and splits
+the Morton-sorted batch with ``shard_map``; ``object_sharded`` splits the
+*object* set into Morton-contiguous slices with a local quadtree per device
+and merge-reduces per-query lists; ``hybrid`` composes both on a 2-D
+``("query", "object")`` mesh (``mesh_shape`` becomes a pair).  Drift
+statistics come back ``psum``-reduced over every mesh axis so the rebuild
+trigger sees the whole tick's volume; :func:`object_shard_of` evaluates the
+object-shard ownership rule for the session's delta routing.
 """
 from __future__ import annotations
 
@@ -48,6 +53,7 @@ from functools import partial
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .executor import QueryExecutor, available_backends, available_plans
@@ -60,6 +66,8 @@ __all__ = [
     "EngineConfig",
     "validate_engine_params",
     "scatter_positions",
+    "object_shard_of",
+    "route_delta",
 ]
 
 
@@ -93,8 +101,23 @@ def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None):
         )
     if k > chunk:
         raise ValueError(f"k ({k}) must be <= chunk ({chunk})")
-    if mesh_shape is not None and mesh_shape < 1:
-        raise ValueError(f"mesh_shape must be >= 1, got {mesh_shape}")
+    if mesh_shape is not None:
+        if isinstance(mesh_shape, (tuple, list)):
+            if len(mesh_shape) != 2 or any(
+                not isinstance(d, int) or d < 1 for d in mesh_shape
+            ):
+                raise ValueError(
+                    "mesh_shape tuples must be a (query, object) pair of "
+                    f"positive ints, got {mesh_shape!r}"
+                )
+            if isinstance(plan, str) and plan != "hybrid":
+                raise ValueError(
+                    f"plan {plan!r} lays a 1-D mesh; mesh_shape must be an "
+                    f"int, got {tuple(mesh_shape)!r} (2-D shapes are for "
+                    "plan='hybrid')"
+                )
+        elif mesh_shape < 1:
+            raise ValueError(f"mesh_shape must be >= 1, got {mesh_shape}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +131,10 @@ class EngineConfig:
     region_pad: float = 1e-3
     backend: str = "dense_topk"  # SCAN backend (executor.available_backends())
     plan: str = "single"  # execution plan (executor.available_plans())
-    mesh_shape: int | None = None  # devices on the ("query",) axis; None = all
+    # devices on the plan's mesh: an int for the 1-D plans (sharded /
+    # object_sharded), a (query, object) pair for hybrid; None = all devices
+    # (hybrid: the most balanced factorization of the device count)
+    mesh_shape: int | tuple[int, int] | None = None
     max_iters: int = 100_000
 
     def __post_init__(self):
@@ -192,6 +218,59 @@ def _tick_step(
     )
     should_rebuild = stats.candidates > rebuild_factor * work_at_build
     return index, nn_idx, nn_dist, stats, should_rebuild
+
+
+@partial(jax.jit, static_argnames=("num_shards",))
+def object_shard_of(index, ids, num_shards: int):
+    """Owning object shard of each object id under the live index.
+
+    Evaluates the shard-ownership rule of DESIGN.md §12 device-side: an
+    object's owner is its Morton *rank* in the current index divided by the
+    shard capacity ``ceil(N / num_shards)`` — the same slicing the
+    object-sharded plans apply inside the tick step.  Ownership must be
+    re-derived from the index each tick because objects change rank as they
+    move.  Returns (m,) int32 shard indices in ``[0, num_shards)``.
+
+    ``ids`` must be in ``[0, index.n_objects)`` — jnp's clamping gather
+    would otherwise return confidently wrong owners for stale ids, so the
+    host-facing caller (``KnnSession.object_shards``) validates the range
+    eagerly.
+    """
+    from .plan import object_shard_capacity
+
+    n = index.n_objects
+    rank = (
+        jnp.zeros((n,), jnp.int32)
+        .at[index.ids]
+        .set(jnp.arange(n, dtype=jnp.int32))
+    )
+    cap = object_shard_capacity(n, num_shards)
+    return rank[jnp.asarray(ids, jnp.int32)] // cap
+
+
+@partial(jax.jit, static_argnames=("num_shards",))
+def route_delta(index, ids, new_pos, num_shards: int):
+    """Group a (sentinel-padded) delta batch by owning shard, device-side.
+
+    Stable-sorts the batch rows by :func:`object_shard_of` ownership
+    (sentinel rows — ``id >= N``, dropped by the scatter — sort last as a
+    virtual shard ``num_shards``) and returns the reordered ``(ids,
+    new_pos)``.  Runs entirely on device: no host readback, so delta staging
+    keeps the async-dispatch property the session's overlap contract relies
+    on.  Today the positions buffer is replicated and the grouping is a pure
+    reorder of unique ids (bit-identical results, pinned by the routing-edge
+    regressions in tests/test_api.py); it stages the memory layout a
+    per-shard-resident positions buffer will scatter as contiguous runs.
+    """
+    n = index.n_objects
+    ids = jnp.asarray(ids, jnp.int32)
+    shard = jnp.where(
+        ids < n,
+        object_shard_of(index, jnp.clip(ids, 0, max(n - 1, 0)), num_shards),
+        num_shards,
+    )
+    order = jnp.argsort(shard)  # jnp.argsort is stable by default
+    return ids[order], new_pos[order]
 
 
 @jax.jit

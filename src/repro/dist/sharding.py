@@ -55,16 +55,18 @@ DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
     "conv": None,
 }
 
-# Spatial logical axes for the k-NN serving path (DESIGN.md §10).  The tick
-# mesh is 1-D ``("query",)``: the Morton-sorted query batch splits across
-# devices, while objects and cells stay replicated — every device holds the
-# whole quadtree (positions + count pyramid), so per-query results need no
-# cross-device candidate exchange.  "object"/"cell" are reserved for the
-# object-sharded plan (deferred: cross-shard NAV; the merge primitive in
-# kernels/merge_topk.py is its reduction step).
+# Spatial logical axes for the k-NN serving path (DESIGN.md §10/§12).  Tick
+# meshes name up to two axes: ``("query",)`` (the sharded plan: Morton-sorted
+# query batch split across devices, quadtree replicated), ``("object",)``
+# (the object-sharded plan: Morton-contiguous object slices, one local
+# quadtree per device, per-query lists merge-reduced across the axis via
+# kernels/merge_topk.py) and the 2-D ``("query", "object")`` hybrid mesh.
+# The missing-axis fixup below makes one rule table serve all three: on a
+# query-only mesh the "object" binding drops away (values replicate), and
+# vice versa.  "cell" stays reserved (a future cell-granular layout).
 SPATIAL_RULES: dict[str, str | tuple[str, ...] | None] = {
     "query": "query",
-    "object": None,
+    "object": "object",
     "cell": None,
 }
 

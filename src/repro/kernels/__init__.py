@@ -17,6 +17,7 @@ from .ops import (
     register_scan_backend,
     scan_backend_names,
     topk_select_op,
+    tree_merge_lists,
 )
 from .ref import (
     bucket_kselect_ref,
@@ -43,4 +44,5 @@ __all__ = [
     "get_merge_backend",
     "register_merge_backend",
     "merge_backend_names",
+    "tree_merge_lists",
 ]

@@ -70,8 +70,14 @@ def _make_kernel(k: int, w: int, num_bins: int, iters: int):
         # The k-th element lies in [flo, fhi) up to float rounding of the bucket
         # edges; one extra bucket width of slop makes the prune safely
         # conservative (excess survivors cost nothing — the argmin rounds below
-        # still pick the exact k smallest).
-        radius = jnp.where(n_valid < k, big, fhi + (fhi - flo))
+        # still pick the exact k smallest).  The slop is floored at a relative
+        # epsilon: once the interval narrows below one ulp of its magnitude,
+        # ``lo + width`` rounds back onto ``lo`` and ``fhi - flo`` collapses to
+        # 0 — with massed duplicate ties at the k-th distance the collapsed
+        # ``fhi`` can land EXACTLY on the k-th value and a ``< radius`` prune
+        # would drop every tied member (caught by tests/test_properties.py).
+        slop = jnp.maximum(fhi - flo, fhi * 1e-6 + 1e-30)
+        radius = jnp.where(n_valid < k, big, fhi + slop)
         d_sel = jnp.where(all_d < radius[:, None], all_d, big)
 
         # --- pillar 2: ascending materialization by masked argmin rounds.

@@ -1,13 +1,15 @@
 """Pallas TPU kernel: merge two ascending (dist, id) result lists per row.
 
-The reduction operator of the sharded execution plans (DESIGN.md §10): given
-two partial k-NN result lists per query — each ascending, ``+inf``/``-1``
-padded, produced against *disjoint* candidate subsets — emit the k smallest of
-the union, ascending, with the same tie-resolution contract as the SCAN
-backends (ties at the k-th distance resolved arbitrarily).  This is what makes
-per-partition k-NN composable: ``knn(P_a ∪ P_b) = merge(knn(P_a), knn(P_b))``,
-the per-partition merge of Gowanlock's hybrid KNN-join, and the future
-object-sharded plan's cross-device reduction step.
+The reduction operator of the object-sharded execution plans (DESIGN.md
+§10/§12): given two partial k-NN result lists per query — each ascending,
+``+inf``/``-1`` padded, produced against *disjoint* candidate subsets — emit
+the k smallest of the union, ascending, under the same canonical
+lexicographic ``(d2, id)`` tie contract as the SCAN backends (distance ties
+resolve to the lowest id).  This is what makes per-partition k-NN composable
+*bit-exactly*: ``knn(P_a ∪ P_b) = merge(knn(P_a), knn(P_b))`` — the
+per-partition merge of Gowanlock's hybrid KNN-join, wired into the
+``object_sharded``/``hybrid`` plans' cross-device tree reduction
+(``kernels.ops.tree_merge_lists``).
 
 Implementation mirrors ``topk_select``: the concatenated (T, ka+kb) row lives
 in VMEM and is materialized by k masked argmin rounds — for list-sized inputs

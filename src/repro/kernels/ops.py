@@ -12,8 +12,10 @@ Two things live here:
    "merge one window of gathered candidates into each query's ascending result
    list" — is a pluggable strategy selected by name.  All backends implement
    ``merge(qpos, cpos, cids, valid, best_d, best_i, k)`` with identical
-   semantics (k smallest of the union, ascending, (-1, inf) padded; k-th-
-   distance ties arbitrary) so they are interchangeable under the executor:
+   semantics (k smallest of the union, ascending, (-1, inf) padded; distance
+   ties resolved to the lowest id — the canonical lexicographic ``(d2, id)``
+   selection order of DESIGN.md §12) so they are interchangeable under the
+   executor *bit-for-bit*:
 
    - ``dense_topk``   XLA ``lax.top_k`` over the concatenated row (seed path);
    - ``fused_bucket`` one Pallas kernel: distance tile + Alabi bucket radius +
@@ -42,6 +44,7 @@ __all__ = [
     "topk_select_op",
     "fused_scan_merge_op",
     "merge_topk_lists_op",
+    "tree_merge_lists",
     "register_scan_backend",
     "get_scan_backend",
     "scan_backend_names",
@@ -202,16 +205,25 @@ def _masked_d2(qpos, cpos, valid):
     return jnp.where(valid, dx * dx + dy * dy, jnp.inf)
 
 
-@register_scan_backend("dense_topk")
-def _dense_topk_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
-    """The seed path: concatenated row -> XLA ``lax.top_k`` (sort-based)."""
+def _lex_sort_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
+    """Concatenated row -> XLA two-key ``lax.sort``, lexicographic (d2, id).
+
+    One body for both the ``dense_topk`` and ``brute`` names: the canonical
+    lowest-id tie order (DESIGN.md §12) cannot be expressed by
+    ``lax.top_k`` (its tie-break is positional), so the seed top_k path and
+    the full-row-sort Garcia flavour collapse into the same program — a
+    k-independent full sort.  Both names stay registered for the serving/
+    benchmark surface; s4 rows for them now measure the same executable.
+    """
     d2 = _masked_d2(qpos, cpos, valid)
     all_d = jnp.concatenate([best_d, d2], axis=1)
     all_i = jnp.concatenate([best_i, cids.astype(jnp.int32)], axis=1)
-    neg, sel = jax.lax.top_k(-all_d, k)
-    out_d = -neg
-    out_i = jnp.take_along_axis(all_i, sel, axis=1)
-    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+    sd, si = jax.lax.sort((all_d, all_i), num_keys=2)
+    out_d = sd[:, :k]
+    return out_d, jnp.where(jnp.isinf(out_d), -1, si[:, :k])
+
+
+register_scan_backend("dense_topk")(_lex_sort_merge)
 
 
 @register_scan_backend("fused_bucket")
@@ -220,16 +232,7 @@ def _fused_bucket_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
     return fused_scan_merge_op(qpos, cpos, cids, valid, best_d, best_i, k=k)
 
 
-@register_scan_backend("brute")
-def _brute_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
-    """Garcia-baseline flavour: full row sort, selection cost independent of k."""
-    d2 = _masked_d2(qpos, cpos, valid)
-    all_d = jnp.concatenate([best_d, d2], axis=1)
-    all_i = jnp.concatenate([best_i, cids.astype(jnp.int32)], axis=1)
-    order = jnp.argsort(all_d, axis=1)
-    out_d = jnp.take_along_axis(all_d, order[:, :k], axis=1)
-    out_i = jnp.take_along_axis(all_i, order[:, :k], axis=1)
-    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+register_scan_backend("brute")(_lex_sort_merge)
 
 
 # --------------------------------------------------------------------------
@@ -276,3 +279,35 @@ def _dense_merge_lists(d_a, i_a, d_b, i_b, k: int):
 def _fused_merge_lists(d_a, i_a, d_b, i_b, k: int):
     """Pallas kernel; auto-interprets off-TPU (runtime.default_interpret)."""
     return merge_topk_lists_op(d_a, i_a, d_b, i_b, k=k)
+
+
+def tree_merge_lists(d_all, i_all, *, k: int, merge="dense_merge"):
+    """(R, Q, ≥k) per-shard lists -> (Q, k) merged list by a binary tree.
+
+    The reduction of the object-sharded plans (DESIGN.md §12): ``R`` partial
+    result lists — one per object shard, each ascending and +inf/-1 padded —
+    are pairwise-merged in ``ceil(log2 R)`` rounds with the selected MERGE
+    backend.  Because the merge operator is the canonical lexicographic
+    ``(d2, id)`` k-selection, the reduction is associative and commutative on
+    id-disjoint inputs: any tree shape yields the same bits, and the result
+    equals ``knn`` over the union of the partitions (the composition law,
+    pinned R-way in tests/test_kernels.py).
+
+    ``R`` need not be a power of two: odd tails pass through a round unmerged.
+    Shapes are static (R is a Python int), so under ``jit`` the tree unrolls
+    into a fixed ``log2 R``-deep program.
+    """
+    fn = get_merge_backend(merge) if isinstance(merge, str) else merge
+    lists = [(d_all[r], i_all[r]) for r in range(d_all.shape[0])]
+    if not lists:
+        raise ValueError("tree_merge_lists needs at least one shard list")
+    while len(lists) > 1:
+        nxt = []
+        for a in range(0, len(lists) - 1, 2):
+            (da, ia), (db, ib) = lists[a], lists[a + 1]
+            nxt.append(fn(da, ia, db, ib, k))
+        if len(lists) % 2:
+            nxt.append(lists[-1])
+        lists = nxt
+    d, i = lists[0]
+    return d[:, :k], i[:, :k]

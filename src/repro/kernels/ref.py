@@ -71,23 +71,27 @@ def topk_select_ref(d2, ids, *, k: int):
 
     Ascending; +inf / -1 padded.  This is the result-list materialization of the
     paper (Fig. 1 linear layout) and doubles as MoE top-k routing (on -logits).
+    Distance ties resolve to the lowest id — the canonical lexicographic
+    ``(d2, id)`` selection order (DESIGN.md §12) shared by every SCAN/MERGE
+    backend, which makes selection a pure function of the candidate *set*:
+    composable across arbitrary object partitions, hence across plans.
     """
     import jax
 
-    neg, sel = jax.lax.top_k(-d2, k)
-    out_d = -neg
-    out_i = jnp.take_along_axis(ids, sel, axis=1)
-    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    sd, si = jax.lax.sort((d2, ids), num_keys=2)
+    out_d = sd[:, :k]
+    out_i = jnp.where(jnp.isinf(out_d), -1, si[:, :k])
     return out_d, out_i
 
 
 def merge_topk_lists_ref(d_a, i_a, d_b, i_b, *, k: int):
     """Merge two ascending per-row (dist, id) lists -> k smallest of the union.
 
-    The reduction operator of the sharded plans (DESIGN.md §10): both inputs
-    ascending and +inf/-1 padded, output likewise; k-th-distance ties resolved
-    arbitrarily — identical contract to the SCAN backends, so per-partition
-    partial results compose: ``knn(A ∪ B) = merge(knn(A), knn(B))``.
+    The reduction operator of the sharded plans (DESIGN.md §10/§12): both
+    inputs ascending and +inf/-1 padded, output likewise; distance ties
+    resolve to the lowest id — identical contract to the SCAN backends, so
+    per-partition partial results compose *bit-exactly*:
+    ``knn(A ∪ B) = merge(knn(A), knn(B))``.
     """
     all_d = jnp.concatenate([d_a, d_b], axis=1)
     all_i = jnp.concatenate([i_a, i_b], axis=1)

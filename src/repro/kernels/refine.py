@@ -23,26 +23,27 @@ def masked_argmin_rounds(d, ids, k: int):
     The kernel-side top-k materialization (paper Fig. 1 linear layout): each
     round extracts the row minimum, records (dist, id) — +inf slots pad with
     id -1 — and masks the hit.  ``d`` must have invalid entries pre-masked to
-    +inf; ties resolve to the lowest column (``argmin``), which is the
-    arbitrary-tie freedom of the selection contract.
+    +inf.  Distance ties resolve to the **lowest id** (the canonical
+    lexicographic ``(dist, id)`` selection contract of DESIGN.md §12): every
+    backend/kernel/plan produces the same list bit-for-bit, which is what
+    makes per-partition results composable under the object-sharded plans.
+    Exact ``(dist, id)`` duplicates (only the +inf/-1 padding in valid use)
+    resolve to the lowest column, one per round.
     """
     t, c = d.shape
     col = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
     big = jnp.asarray(jnp.inf, jnp.float32)
+    id_big = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
 
     def body(j, state):
         dd, out_d, out_i = state
-        m = jnp.argmin(dd, axis=1)  # (T,)
-        mval = jnp.min(dd, axis=1)
-        hit = col == m[:, None]
+        mval = jnp.min(dd, axis=1)  # (T,)
+        tied = dd == mval[:, None]
+        mid = jnp.min(jnp.where(tied, ids, id_big), axis=1)  # (T,) lowest id
+        win = tied & (ids == mid[:, None])
+        hit = col == jnp.argmax(win, axis=1)[:, None]  # exactly one column
         out_d = out_d.at[:, j].set(mval)
-        out_i = out_i.at[:, j].set(
-            jnp.where(
-                jnp.isinf(mval),
-                -1,
-                jnp.take_along_axis(ids, m[:, None], 1)[:, 0],
-            )
-        )
+        out_i = out_i.at[:, j].set(jnp.where(jnp.isinf(mval), -1, mid))
         return jnp.where(hit, big, dd), out_d, out_i
 
     out_d = jnp.zeros((t, k), jnp.float32)

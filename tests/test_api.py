@@ -49,6 +49,9 @@ def _engine(spec):
     (dict(chunk=100, window=64), r"chunk \(100\).*multiple of window \(64\)"),
     (dict(k=3000, chunk=2048, window=256), r"k \(3000\).*<= chunk \(2048\)"),
     (dict(mesh_shape=0), r"mesh_shape"),
+    (dict(mesh_shape=(2, 4, 8)), r"query, object"),
+    (dict(plan="sharded", mesh_shape=(2, 4)), r"1-D mesh"),
+    (dict(plan="object_sharded", mesh_shape=(2, 4)), r"1-D mesh"),
     (dict(side=-1.0), r"side"),
     (dict(delta_pad=0), r"delta_pad"),
 ])
@@ -141,6 +144,139 @@ def test_delta_updates_bit_identical_sharded_plan():
         r_e = eng.process_tick(cur, cur, qid)
         np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
         np.testing.assert_array_equal(r_s.nn_dist, r_e.nn_dist)
+
+
+# ------------------------------------------- delta routing, object-axis plans
+
+def _object_plan_spec(plan):
+    mesh = NDEV if plan == "object_sharded" else None  # hybrid: balanced
+    return _spec(plan=plan, chunk=32, mesh_shape=mesh)
+
+
+@pytest.mark.parametrize("plan", ["object_sharded", "hybrid"])
+def test_delta_routing_single_shard_batch(plan):
+    """Routing edge 1: an update batch whose every moved row is owned by ONE
+    object shard — the grouped scatter must stay bit-identical to the
+    snapshot engine path (DESIGN.md §12 ownership rule)."""
+    w = make_workload(400, "gaussian", seed=11, hotspots=3)
+    pts = w.positions().copy()
+    qid = np.arange(len(pts), dtype=np.int32)
+    spec = _object_plan_spec(plan)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts, qid)
+    eng = _engine(spec)
+    r_s = sess.submit().result()
+    r_e = eng.process_tick(pts, pts, qid)
+    np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
+
+    owners = sess.object_shards(np.arange(len(pts)))
+    target = int(owners[0])
+    ids = np.nonzero(owners == target)[0].astype(np.int32)
+    assert ids.size > 0 and (sess.object_shards(ids) == target).all()
+    rng = np.random.default_rng(5)
+    cur = pts.copy()
+    cur[ids] = np.clip(
+        cur[ids] + rng.uniform(-50, 50, (ids.size, 2)).astype(np.float32),
+        0, spec.side - 1e-3)
+    sess.update_objects(ids, cur[ids])
+    sess.update_queries(hq, cur)
+    r_s = sess.submit().result()
+    r_e = eng.process_tick(cur, cur, qid)
+    np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
+    np.testing.assert_array_equal(r_s.nn_dist, r_e.nn_dist)
+
+
+@pytest.mark.parametrize("plan", ["object_sharded", "hybrid"])
+def test_delta_routing_row_crosses_shard_ownership(plan):
+    """Routing edge 2: a row whose move changes its owning shard between
+    ticks (Morton rank jump across slice boundaries) — ownership is
+    re-derived from the live index, results stay bit-identical."""
+    w = make_workload(300, "uniform", seed=13)
+    pts = w.positions().copy()
+    qid = np.arange(len(pts), dtype=np.int32)
+    spec = _object_plan_spec(plan)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts, qid)
+    eng = _engine(spec)
+    sess.submit().result()
+    eng.process_tick(pts, pts, qid)
+
+    # the Morton-first object, teleported to the far corner: rank 0 -> n-1
+    mover = int(np.asarray(sess.index.ids)[0])
+    before = int(sess.object_shards([mover])[0])
+    cur = pts.copy()
+    cur[mover] = [spec.side - 1.0, spec.side - 1.0]
+    sess.update_objects([mover], cur[mover][None])
+    sess.update_queries(hq, cur)
+    r_s = sess.submit().result()
+    r_e = eng.process_tick(cur, cur, qid)
+    np.testing.assert_array_equal(r_s.nn_idx, r_e.nn_idx)
+    np.testing.assert_array_equal(r_s.nn_dist, r_e.nn_dist)
+    after = int(sess.object_shards([mover])[0])
+    shards = sess.plan.object_axis_size
+    if shards > 1:
+        assert before == 0 and after == shards - 1  # ownership crossed
+
+
+@pytest.mark.parametrize("plan", ["object_sharded", "hybrid"])
+def test_delta_routing_empty_delta_tick(plan):
+    """Routing edge 3: an empty update batch is a no-op tick — identical
+    results to resubmitting unchanged state, and to the snapshot engine."""
+    w = make_workload(250, "network", seed=19)
+    pts = w.positions().copy()
+    qid = np.arange(len(pts), dtype=np.int32)
+    spec = _object_plan_spec(plan)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(pts, qid)
+    eng = _engine(spec)
+    r0 = sess.submit().result()
+    e0 = eng.process_tick(pts, pts, qid)
+    sess.update_objects(np.zeros((0,), np.int32), np.zeros((0, 2), np.float32))
+    r1 = sess.submit().result()
+    e1 = eng.process_tick(pts, pts, qid)
+    np.testing.assert_array_equal(r0.nn_idx, r1.nn_idx)
+    np.testing.assert_array_equal(r1.nn_idx, e1.nn_idx)
+    np.testing.assert_array_equal(r1.nn_dist, e1.nn_dist)
+    np.testing.assert_array_equal(r0.nn_idx, e0.nn_idx)
+
+
+def test_object_shards_ownership_rule():
+    """`object_shards` IS the documented rule: Morton rank // ceil(N/R)."""
+    w = make_workload(200, "gaussian", seed=23, hotspots=2)
+    pts = w.positions()
+    spec = _object_plan_spec("object_sharded")
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(pts[:32], np.arange(32, dtype=np.int32))
+    if sess.plan.object_axis_size > 1:
+        # ownership is defined by the index's Morton order: not built yet
+        with pytest.raises(RuntimeError, match="before the first submit"):
+            sess.object_shards([0])
+    sess.submit().result()
+    shards = sess.object_shards(np.arange(len(pts)))
+    r = sess.plan.object_axis_size
+    assert shards.min() >= 0 and shards.max() < r
+    # independent spelling of the rule from the index's Morton order
+    order = np.asarray(sess.index.ids)
+    rank = np.empty(len(pts), np.int64)
+    rank[order] = np.arange(len(pts))
+    cap = -(-len(pts) // r)
+    np.testing.assert_array_equal(shards, rank // cap)
+    # stale/unknown ids raise instead of returning clamped garbage owners
+    if r > 1:
+        with pytest.raises(ValueError, match="outside the live index"):
+            sess.object_shards([len(pts)])
+        with pytest.raises(ValueError, match="outside the live index"):
+            sess.object_shards([-1])
+    # plans without an object axis own everything on shard 0
+    s2 = KnnSession(_spec())
+    s2.ingest_objects(pts)
+    s2.register_queries(pts[:32], np.arange(32, dtype=np.int32))
+    s2.submit().result()
+    assert (s2.object_shards(np.arange(len(pts))) == 0).all()
 
 
 # ------------------------------------------------------ query registry (tent)

@@ -13,6 +13,7 @@ from repro.kernels import (
     pairwise_dist_ref,
     topk_select_op,
     topk_select_ref,
+    tree_merge_lists,
 )
 
 
@@ -124,4 +125,41 @@ def test_merge_composes_partitioned_knn(backend):
     full_d, full_i = topk_select_ref(jnp.asarray(d2), jnp.asarray(ids), k=k)
     got_d, got_i = get_merge_backend(backend)(da, ia, db, ib, k)
     np.testing.assert_allclose(np.asarray(got_d), np.asarray(full_d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(full_i))
+
+
+@pytest.mark.parametrize("backend", merge_backend_names())
+@pytest.mark.parametrize("r", [2, 3, 8])
+def test_tree_merge_composes_r_way_partition(backend, r):
+    """The sharded generalization: knn over an R-way object partition equals
+    an R-way ``tree_merge_lists`` reduction of the per-partition lists —
+    including the uneven final shard (its list padded with (inf, -1) rows
+    when the slice holds fewer than k candidates) and massed distance ties
+    (duplicated columns), bit-for-bit under the canonical lexicographic
+    ``(d2, id)`` contract of DESIGN.md §12."""
+    rng = np.random.default_rng(100 + r)
+    n, q, k = 89, 24, 6  # 89: uneven tail slice for every r; tail < cap
+    qpos = rng.uniform(0, 1000, (q, 2)).astype(np.float32)
+    pts = rng.uniform(0, 1000, (45, 2)).astype(np.float32)
+    pts = np.tile(pts, (2, 1))[:n]  # duplicated positions -> distance ties
+    d2 = np.square(qpos[:, None, :] - pts[None, :, :]).sum(-1).astype(np.float32)
+    ids = np.tile(rng.permutation(n).astype(np.int32), (q, 1))
+    full_d, full_i = topk_select_ref(jnp.asarray(d2), jnp.asarray(ids), k=k)
+    cap = -(-n // r)
+    parts_d, parts_i = [], []
+    for s in range(r):
+        sl = slice(s * cap, min((s + 1) * cap, n))
+        pd, pi = topk_select_ref(
+            jnp.asarray(d2[:, sl]), jnp.asarray(ids[:, sl]), k=k)
+        pad = k - pd.shape[1]
+        if pad > 0:  # final shard narrower than k: inf/-1 padded list
+            pd = jnp.concatenate(
+                [pd, jnp.full((q, pad), jnp.inf, jnp.float32)], axis=1)
+            pi = jnp.concatenate(
+                [pi, jnp.full((q, pad), -1, jnp.int32)], axis=1)
+        parts_d.append(pd)
+        parts_i.append(pi)
+    got_d, got_i = tree_merge_lists(
+        jnp.stack(parts_d), jnp.stack(parts_i), k=k, merge=backend)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(full_d))
     np.testing.assert_array_equal(np.asarray(got_i), np.asarray(full_i))

@@ -20,6 +20,8 @@ import pytest
 
 from repro.core import (
     EngineConfig,
+    HybridPlan,
+    ObjectShardedPlan,
     ShardedPlan,
     SinglePlan,
     TickEngine,
@@ -38,7 +40,9 @@ NDEV = jax.device_count()
 # ------------------------------------------------------------------ registry
 
 def test_plan_registry_names():
-    assert set(available_plans()) == {"single", "sharded"}
+    assert set(available_plans()) == {
+        "single", "sharded", "object_sharded", "hybrid"
+    }
 
 
 def test_unknown_plan_rejected():
@@ -67,16 +71,54 @@ def test_resolve_plan_defaults():
     assert isinstance(p, ShardedPlan) and p.num_devices == NDEV
     assert resolve_plan("sharded", num_devices=1) == ShardedPlan(num_devices=1)
     assert resolve_plan(p) is p
+    o = resolve_plan("object_sharded")
+    assert isinstance(o, ObjectShardedPlan) and o.num_devices == NDEV
+    assert o.object_axis_size == NDEV and o.merge == "dense_merge"
+    h = resolve_plan("hybrid")
+    assert isinstance(h, HybridPlan)
+    assert h.query_devices * h.object_devices == NDEV
+    assert h.query_devices <= h.object_devices  # balanced factorization
+    assert resolve_plan("hybrid", num_devices=(1, 1)) == HybridPlan(1, 1)
+    # 1-D plans reject 2-D mesh shapes, hybrid rejects malformed tuples
+    with pytest.raises(ValueError, match="1-D mesh"):
+        resolve_plan("sharded", num_devices=(2, 2))
+    with pytest.raises(ValueError, match="1-D mesh"):
+        resolve_plan("object_sharded", num_devices=(2, 2))
+    with pytest.raises(ValueError, match="query, object"):
+        resolve_plan("hybrid", num_devices=(2, 2, 2))
+
+
+def test_plan_pad_multiples_and_object_axis():
+    """Query padding granularity: chunk per query-axis device; the object
+    axis never pads queries (the batch is replicated across it)."""
+    chunk = 64
+    assert SinglePlan().pad_multiple(chunk) == chunk
+    assert ShardedPlan(num_devices=4).pad_multiple(chunk) == 4 * chunk
+    assert ObjectShardedPlan(num_devices=4).pad_multiple(chunk) == chunk
+    assert HybridPlan(2, 4).pad_multiple(chunk) == 2 * chunk
+    assert SinglePlan().object_axis_size == 1
+    assert ShardedPlan(num_devices=4).object_axis_size == 1
+    assert ObjectShardedPlan(num_devices=4).object_axis_size == 4
+    assert HybridPlan(2, 4).object_axis_size == 4
 
 
 def test_sharded_plan_rejects_bad_device_counts():
     with pytest.raises(ValueError):
         ShardedPlan(num_devices=0)
+    with pytest.raises(ValueError):
+        ObjectShardedPlan(num_devices=0)
+    with pytest.raises(ValueError):
+        HybridPlan(0, 1)
     with pytest.raises(ValueError, match="devices"):
         # plan constructs, the mesh (built at trace time) rejects the overask
         knn_query_batch_chunked(
             _tiny_index(), np.zeros((4, 2), np.float32), None,
             k=2, chunk=4, plan="sharded", num_devices=NDEV + 1,
+        )
+    with pytest.raises(ValueError, match="devices"):
+        knn_query_batch_chunked(
+            _tiny_index(), np.zeros((4, 2), np.float32), None,
+            k=2, chunk=4, plan="object_sharded", num_devices=NDEV + 1,
         )
 
 
@@ -196,37 +238,70 @@ def test_engine_plan_parity_over_ticks():
         assert rs.rebuilt == rh.rebuilt
 
 
+@pytest.mark.parametrize("plan,mesh", [
+    ("object_sharded", None),   # None -> every visible device
+    ("hybrid", None),           # None -> balanced factorization
+])
+def test_engine_object_plan_parity_over_ticks(plan, mesh):
+    """TickEngine under the object-axis plans == plan=single, tick for tick,
+    bitwise on results.  (Stats — iterations/candidates — legitimately differ:
+    local trees prune differently; the canonical-selection contract makes
+    results partition-invariant anyway, see DESIGN.md §12.)"""
+    def run(p, m):
+        eng = TickEngine(
+            EngineConfig(k=6, th_quad=16, l_max=5, window=32, chunk=64,
+                         plan=p, mesh_shape=m)
+        )
+        w = make_workload(600, "gaussian", seed=2, hotspots=4)
+        return eng.run(w, ticks=3)
+
+    for rs, rh in zip(run("single", None), run(plan, mesh)):
+        np.testing.assert_array_equal(rs.nn_idx, rh.nn_idx)
+        np.testing.assert_array_equal(rs.nn_dist, rh.nn_dist)
+
+
 # -------------------------------------------- forced 8-device mesh (real XLA)
 
 def test_sharded_determinism_on_forced_8_device_mesh():
-    """The acceptance criterion on real multi-device XLA: an 8-device CPU mesh
+    """The acceptance criterion on real multi-device XLA: an 8-device CPU grid
     (forced host devices) produces bit-identical results to the single plan on
-    all three workload families, engine path included.
+    all three workload families for EVERY mesh plan — sharded (8-way query),
+    object_sharded (8-way object) and hybrid (the 2x4 grid) — engine path
+    included.
 
     Runs in a subprocess because the device count must be set before jax init.
     """
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings
+warnings.filterwarnings("ignore", category=DeprecationWarning)
 import numpy as np, jax, jax.numpy as jnp
 assert jax.device_count() == 8, jax.device_count()
 from repro.core import EngineConfig, TickEngine, build_index, knn_query_batch_chunked
 from repro.data import make_workload
 
+MESHES = [("sharded", 8), ("object_sharded", 8), ("hybrid", (2, 4))]
 for dist in ("uniform", "gaussian", "network"):
     w = make_workload(500, dist, seed=5)
     pts = w.positions(); qpos, qid = w.query_batch()
     idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22500.0, l_max=5, th_quad=24)
     a_i, a_d, _ = knn_query_batch_chunked(idx, qpos, qid, k=6, window=32, chunk=32, plan="single")
-    b_i, b_d, _ = knn_query_batch_chunked(idx, qpos, qid, k=6, window=32, chunk=32, plan="sharded", num_devices=8)
-    np.testing.assert_array_equal(a_i, b_i)
-    np.testing.assert_array_equal(a_d, b_d)
+    for plan, mesh in MESHES:
+        b_i, b_d, _ = knn_query_batch_chunked(idx, qpos, qid, k=6, window=32, chunk=32, plan=plan, num_devices=mesh)
+        np.testing.assert_array_equal(a_i, b_i, err_msg=f"{dist}/{plan}")
+        np.testing.assert_array_equal(a_d, b_d, err_msg=f"{dist}/{plan}")
 
-eng = TickEngine(EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=32, plan="sharded", mesh_shape=8))
 w = make_workload(400, "gaussian", seed=3, hotspots=3)
-res = eng.run(w, ticks=2)
-assert res[0].nn_dist.shape == (400, 4)
-assert np.isfinite(res[1].nn_dist).all()
+ref = TickEngine(EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=32)).run(
+    make_workload(400, "gaussian", seed=3, hotspots=3), ticks=2)
+for plan, mesh in MESHES:
+    eng = TickEngine(EngineConfig(k=4, th_quad=16, l_max=5, window=32, chunk=32, plan=plan, mesh_shape=mesh))
+    res = eng.run(make_workload(400, "gaussian", seed=3, hotspots=3), ticks=2)
+    assert res[0].nn_dist.shape == (400, 4)
+    for r, s in zip(ref, res):
+        np.testing.assert_array_equal(r.nn_idx, s.nn_idx, err_msg=plan)
+        np.testing.assert_array_equal(r.nn_dist, s.nn_dist, err_msg=plan)
 print("SHARDED_8DEV_OK")
 """
     env = dict(os.environ, PYTHONPATH=SRC)
