@@ -5,8 +5,12 @@ has a __main__ for full-size runs; this runner uses CPU-feasible defaults.
 
 ``--smoke`` runs a minutes-scale subset and writes ``BENCH_smoke.json``
 (queries/s + candidates/s per backend, engine tick latency, serving-mode
-rows) plus ``BENCH_serving.json`` (snapshot vs delta ingest x blocking vs
-overlapped submit, s6) — the per-PR perf trajectory artifacts consumed by CI.
+rows) plus ``BENCH_serving_smoke.json`` (snapshot vs delta ingest x blocking
+vs overlapped submit, s6) and ``BENCH_skew_smoke.json`` (straggler gap:
+equal vs cost_balanced partitioner on a forced 8-device grid, s7) — the
+per-PR perf trajectory artifacts consumed by CI.  The plain
+``BENCH_serving.json``/``BENCH_skew.json`` are committed full-size
+artifacts, regenerated only by full (non-smoke) runs.
 """
 from __future__ import annotations
 
@@ -64,6 +68,20 @@ def _smoke(out_path: str) -> None:
         objects=4_000, ticks=4, k=16, chunk=1024, window=128,
         out="BENCH_serving_smoke.json",
     )
+
+    # skew row: the partitioner seam's straggler-gap probe on a forced
+    # 8-device grid (equal vs cost_balanced, bit-identity asserted in-run);
+    # one exponent x the query-sharded plans keeps smoke minutes-scale.
+    # Written under a _smoke name: the plain BENCH_skew.json is the
+    # committed full-matrix artifact (s7 at full size) and must not be
+    # clobbered by smoke runs — same discipline as BENCH_serving.json above
+    from benchmarks import s7_skew
+
+    rec["skew"] = s7_skew.run(
+        objects=2_048, ticks=3, k=8, chunk=128, exponents=(1.6,),
+        plans=(("sharded", "8"), ("hybrid", "2x4")),
+        out="BENCH_skew_smoke.json",
+    )
     rec["timestamp"] = time.time()
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -96,6 +114,7 @@ def main() -> None:
         s4_backends,
         s5_scaling,
         s6_serving,
+        s7_skew,
     )
 
     s1_treeheight.run(n_objects=30_000, ks=(8, 32), th_quads=(48, 384, 1536))
@@ -107,6 +126,7 @@ def main() -> None:
     s3_vary_k.run_update_strategies(q=64, c=512, ks=(32,))
     s4_backends.run(n_objects=20_000, k=32, out="BENCH_backends.json")
     s5_scaling.run(objects=8_000, ticks=4, out="BENCH_scaling.json")
+    s7_skew.run(objects=4_096, ticks=4, out="BENCH_skew.json")
     # full scale matches the committed artifact (50K objects x 30 ticks) so a
     # full run regenerates BENCH_serving.json at its documented size
     s6_serving.run(objects=50_000, queries=16_384, ticks=30,

@@ -13,11 +13,15 @@ Runs on any execution plan: ``single`` (one device), ``sharded`` (the 1-D
 ``("object",)`` mesh: Morton-sliced objects, per-device quadtrees,
 merge-reduced lists, DESIGN.md §12) or ``hybrid`` (the 2-D
 ``("query", "object")`` mesh; pick the factorization with ``--mesh QxO``).
+``--partitioner cost_balanced`` swaps the equal-count shard splits for
+skew-adaptive cost-balanced boundaries (count-pyramid seed + measured-work
+EMA, DESIGN.md §13) — same bits, tighter straggler gap under skew.
 
   PYTHONPATH=src python examples/moving_objects_service.py \
       [--objects N] [--ticks T] \
       [--plan single|sharded|object_sharded|hybrid] [--devices D] \
-      [--mesh QxO] [--ingest snapshot|delta] [--overlap]
+      [--mesh QxO] [--partitioner equal|cost_balanced] \
+      [--ingest snapshot|delta] [--overlap]
 
 ``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
 initializes, so the mesh plans run on a real D-device mesh without
@@ -38,7 +42,8 @@ def _parse_args():
     ap.add_argument("--ticks", type=int, default=30)
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--distribution", default="gaussian",
-                    choices=["uniform", "gaussian", "network"])
+                    choices=["uniform", "gaussian", "network", "zipf",
+                             "hotspot_cluster"])
     ap.add_argument("--backend", default="dense_topk",
                     help="SCAN-step selection backend (validated eagerly by "
                          "ServiceSpec against the executor registry)")
@@ -51,6 +56,11 @@ def _parse_args():
     ap.add_argument("--mesh", default=None, metavar="QxO",
                     help="hybrid mesh shape, e.g. 2x4 (query x object "
                          "devices); default: most balanced factorization")
+    ap.add_argument("--partitioner", default="equal",
+                    choices=["equal", "cost_balanced"],
+                    help="work partitioner for the plan's split axes: equal "
+                         "count, or skew-adaptive cost-balanced boundaries "
+                         "(DESIGN.md §13)")
     ap.add_argument("--chunk", type=int, default=8192,
                     help="query chunk rows; batches pad to devices*chunk, so "
                          "use a small chunk for small smoke runs")
@@ -94,7 +104,8 @@ def main():
         spec = ServiceSpec(k=args.k, th_quad=384, l_max=8,
                            window=min(256, args.chunk), chunk=args.chunk,
                            backend=args.backend, plan=args.plan,
-                           mesh_shape=mesh_shape)
+                           mesh_shape=mesh_shape,
+                           partitioner=args.partitioner)
     except ValueError as e:  # eager validation lists the registries
         raise SystemExit(str(e))
 

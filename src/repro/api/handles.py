@@ -7,12 +7,20 @@ it immediately after dispatch, and ``result()`` materializes the ``(Q, k)``
 result batch lazily — so tick τ+1 can be staged and submitted while τ's
 results are still computing/transferring (the paper's CPU/GPU pipeline
 overlap, DESIGN.md §11).
+
+Host collection is ONE batched transfer: ``result()`` pulls ``nn_idx``,
+``nn_dist`` and the per-shard counters through a single ``jax.device_get``
+instead of separate blocking ``np.asarray`` syncs (each sync pays the full
+dispatch-queue drain; batching them collapsed the dominant steady-tick host
+cost measured in BENCH_serving.json).  Pipelines that consume results
+on-device skip the transfer entirely with ``result(materialize=False)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
+import jax
 import numpy as np
 
 from repro.core.ticks import TickResult
@@ -45,7 +53,7 @@ class TickHandle:
         tick: int,
         nn_idx,
         nn_dist,
-        stats,
+        aux,
         should_rebuild,
         nq: int,
         qids: np.ndarray,
@@ -59,7 +67,7 @@ class TickHandle:
         self.tick = tick
         self._nn_idx = nn_idx
         self._nn_dist = nn_dist
-        self._stats = stats
+        self._aux = aux
         self._should_rebuild = should_rebuild
         self._nq = nq
         self._qids = qids
@@ -74,6 +82,7 @@ class TickHandle:
         self._work: float | None = None
         self._iterations: int | None = None
         self._result: TickResult | None = None
+        self._result_dev: TickResult | None = None
 
     def done(self) -> bool:
         """Non-blocking: have this tick's result arrays materialized?"""
@@ -84,20 +93,8 @@ class TickHandle:
         except AttributeError:  # older jax without Array.is_ready
             return False
 
-    def result(self) -> TickResult:
-        """Block until this tick's results are on the host (idempotent).
-
-        Finalizes every earlier in-flight tick first (in submit order), so
-        rebuild bookkeeping is independent of the order in which callers
-        collect results.
-        """
-        if self._result is not None:
-            return self._result
-        self._session._finalize_through(self)
-        nq = self._nq
-        nn_idx = np.asarray(self._nn_idx[:nq])
-        nn_dist = np.asarray(self._nn_dist[:nq])
-        self._result = TickResult(
+    def _tick_result(self, nn_idx, nn_dist, shard_cand, shard_it) -> TickResult:
+        return TickResult(
             tick=self.tick,
             nn_idx=nn_idx,
             nn_dist=nn_dist,
@@ -107,9 +104,45 @@ class TickHandle:
             iterations=self._iterations,
             compile_s=self.compile_s,
             qids=self._qids,
+            shard_candidates=shard_cand,
+            shard_iterations=shard_it,
         )
+
+    def result(self, materialize: bool = True) -> TickResult:
+        """Block until this tick's results are available (idempotent).
+
+        Finalizes every earlier in-flight tick first (in submit order), so
+        rebuild bookkeeping is independent of the order in which callers
+        collect results.
+
+        ``materialize=False`` hands back a :class:`TickResult` whose
+        ``nn_idx``/``nn_dist``/``shard_*`` fields are **device arrays**
+        (sliced views of the tick's outputs) — for pipelines that consume
+        results on-device, where a host round-trip per tick would throw away
+        the submit/result overlap.  It does not release the device buffers;
+        a later ``result()`` still materializes (one batched
+        ``jax.device_get``) and releases them.
+        """
+        if self._result is not None:
+            return self._result
+        self._session._finalize_through(self)
+        nq = self._nq
+        if not materialize:
+            if self._result_dev is None:
+                self._result_dev = self._tick_result(
+                    self._nn_idx[:nq], self._nn_dist[:nq],
+                    self._aux.shard_candidates, self._aux.shard_iterations,
+                )
+            return self._result_dev
+        # ONE batched host transfer for everything the result carries
+        nn_idx, nn_dist, shard_cand, shard_it = jax.device_get(
+            (self._nn_idx[:nq], self._nn_dist[:nq],
+             self._aux.shard_candidates, self._aux.shard_iterations)
+        )
+        self._result = self._tick_result(nn_idx, nn_dist, shard_cand, shard_it)
         # release device references so XLA can recycle the buffers
-        self._nn_idx = self._nn_dist = self._stats = self._should_rebuild = None
+        self._nn_idx = self._nn_dist = self._aux = self._should_rebuild = None
+        self._result_dev = None
         return self._result
 
     def result_for(self, handle: QueryHandle):

@@ -88,6 +88,10 @@ class _QueryRegistry:
         self._live: set[int] = set()
         self._dirty = True
         self._staged = None
+        # True whenever the ROW SET changed (add/drop/replace — not moves):
+        # the session's per-query cost EMA is row-aligned and must reset;
+        # position-only updates keep it (the repeated-query assumption)
+        self.rows_changed = True
 
     @property
     def nq(self) -> int:
@@ -119,6 +123,7 @@ class _QueryRegistry:
         )
         self._live.add(hid)
         self._dirty = True
+        self.rows_changed = True
         return QueryHandle(hid=hid, count=qpos.shape[0])
 
     def _check(self, handle: QueryHandle):
@@ -152,6 +157,7 @@ class _QueryRegistry:
         self.owner = self.owner[keep]
         self._live.discard(handle.hid)
         self._dirty = True
+        self.rows_changed = True
 
     def replace_all(self, qpos, qid=None):
         """Bulk snapshot staging: replaces every row, invalidates all handles."""
@@ -161,6 +167,7 @@ class _QueryRegistry:
         self.owner = np.full((qpos.shape[0],), -1, np.int64)
         self._live = set()
         self._dirty = True
+        self.rows_changed = True
 
     def staged(self):
         """(qpos_dev, qid_dev, nq, qids, owner) — padded, device-resident.
@@ -194,13 +201,26 @@ class KnnSession:
     def __init__(self, spec: ServiceSpec):
         self.spec = spec
         self.executor = resolve_executor(spec.backend)
-        self.plan = resolve_plan(spec.plan, num_devices=spec.mesh_shape)
+        self.plan = resolve_plan(
+            spec.plan, num_devices=spec.mesh_shape,
+            partitioner=spec.partitioner,
+        )
         self._registry = _QueryRegistry(self.plan.pad_multiple(spec.chunk))
         self._positions = None  # (N, 2) f32, device-resident, by object id
         self._index = None
         self._work_at_build: float | None = None
         self._tick = 0
         self._pending: deque[TickHandle] = deque()
+        # per-query cost EMA, device-resident, row-aligned with the padded
+        # registry batch: persists across ticks AND drift rebuilds (queries
+        # are the stable entities of the repeated-query workload); reset
+        # whenever the registry's row set changes (DESIGN.md §13)
+        self._qcost = None
+        # object-axis boundaries the LAST submitted tick actually used
+        # (PlanAux.object_bounds, device-resident): delta routing and
+        # object_shards follow the live partition under cost_balanced;
+        # cleared on drift rebuild (the Morton ranks it indexes change)
+        self._obj_bounds = None
 
     # ------------------------------------------------------------ state views
     @property
@@ -282,13 +302,15 @@ class KnnSession:
         ids_dev, pos_dev = jnp.asarray(ids), jnp.asarray(positions)
         if self.plan.object_axis_size > 1 and self._index is not None:
             # object-sharded plans: group the batch by owning shard (the
-            # Morton-rank rule, DESIGN.md §12) — entirely device-side
-            # (core/ticks.py::route_delta), so staging stays async.  A pure
-            # reordering of now-unique ids: the scattered buffer, and hence
-            # every result, is bit-identical (pinned by the routing-edge
-            # regressions in tests/test_api.py).
+            # Morton-rank rule, DESIGN.md §12; under cost_balanced, the
+            # boundary intervals the last tick used — §13) — entirely
+            # device-side (core/ticks.py::route_delta), so staging stays
+            # async.  A pure reordering of now-unique ids: the scattered
+            # buffer, and hence every result, is bit-identical (pinned by
+            # the routing-edge regressions in tests/test_api.py).
             ids_dev, pos_dev = route_delta(
-                self._index, ids_dev, pos_dev, self.plan.object_axis_size
+                self._index, ids_dev, pos_dev, self.plan.object_axis_size,
+                self._obj_bounds,
             )
         self._positions = scatter_positions(self._positions, ids_dev, pos_dev)
 
@@ -296,12 +318,20 @@ class KnnSession:
         """Owning object shard per object id under the live plan + index.
 
         Evaluates the shard-ownership rule (DESIGN.md §12: Morton rank //
-        ``ceil(N / R)``) against the *current* index — objects change owner
-        as they move through the Morton order, so the answer is only valid
-        until the next tick's reindex.  Plans without an object axis own
-        everything on shard 0.  Requires a built index (the rule is defined
-        by the index's Morton order): before the first submit the partition
-        does not exist yet.
+        ``ceil(N / R)``; under ``cost_balanced``, §13: the boundary interval
+        containing the rank) against the *current* index — objects change
+        owner as they move through the Morton order, so the answer is only
+        valid until the next tick's reindex.  Plans without an object axis
+        own everything on shard 0.  Requires a built index (the rule is
+        defined by the index's Morton order): before the first submit the
+        partition does not exist yet.
+
+        Any still-pending tick is **finalized first** (blocking on its two
+        bookkeeping scalars): a pending tick may carry a drift-rebuild
+        decision, and answering from the pre-rebuild Morton order would
+        silently route the caller's next updates to shards the rebuilt
+        partition no longer owns (the rebuild-then-route regression,
+        tests/test_api.py).
         """
         ids = np.asarray(ids, np.int32).reshape(-1)
         r = self.plan.object_axis_size
@@ -312,6 +342,9 @@ class KnnSession:
                 "object_shards before the first submit: the index (and with "
                 "it the Morton shard ownership) is built lazily at submit()"
             )
+        # apply any pending drift-rebuild decision BEFORE reading ownership,
+        # then recompute from whatever index is live afterwards
+        self._finalize_through()
         n = self._index.n_objects
         if ids.size and ((ids < 0).any() or (ids >= n).any()):
             # jnp's clamping gather would return confidently wrong owners
@@ -321,7 +354,9 @@ class KnnSession:
                 f"object_shards: ids outside the live index's [0, {n}): "
                 f"{bad[:8]}"
             )
-        return np.asarray(object_shard_of(self._index, ids, r))
+        return np.asarray(
+            object_shard_of(self._index, ids, r, self._obj_bounds)
+        )
 
     # ------------------------------------------------------------ query state
     def register_queries(self, qpos, qid=None) -> QueryHandle:
@@ -368,6 +403,10 @@ class KnnSession:
             th_quad=self.spec.th_quad,
         )
         self._work_at_build = None  # set at the next tick's finalize
+        # the stored object boundaries index Morton ranks of the PREVIOUS
+        # partition — stale after a rebuild; ownership answers fall back to
+        # the capacity rule until the next tick returns fresh boundaries
+        self._obj_bounds = None
 
     def _finalize_one(self, h: TickHandle):
         """Read back the tick's bookkeeping scalars and apply the drift policy.
@@ -379,8 +418,8 @@ class KnnSession:
         ``rebuild_factor`` × baseline rebuild the partition — from the newest
         object state — before the next dispatch.
         """
-        h._work = float(h._stats.candidates)
-        h._iterations = int(h._stats.iterations)
+        h._work = float(h._aux.stats.candidates)
+        h._iterations = int(h._aux.stats.iterations)
         if self._work_at_build is None:
             self._work_at_build = h._work
         elif bool(h._should_rebuild):
@@ -418,13 +457,23 @@ class KnnSession:
         if self._index is None:
             self._build()
             rebuilt_pre = True
+        if self._registry.rows_changed:
+            # the cost EMA is row-aligned with the padded registry batch; a
+            # changed row set invalidates the alignment — re-seed from the
+            # count-pyramid estimate (moves via update_queries keep it)
+            self._qcost = None
+            self._registry.rows_changed = False
         qpos_dev, qid_dev, nq, qids, owner = self._registry.staged()
+        qcost_dev = self._qcost
+        if qcost_dev is None or qcost_dev.shape[0] != qpos_dev.shape[0]:
+            qcost_dev = jnp.zeros((qpos_dev.shape[0],), jnp.float32)
         spec = self.spec
-        self._index, nn_idx, nn_dist, stats, should_rebuild = _tick_step(
+        self._index, nn_idx, nn_dist, aux, should_rebuild = _tick_step(
             self._index,
             self._positions,
             qpos_dev,
             qid_dev,
+            qcost_dev,
             jnp.float32(np.inf if self._work_at_build is None
                         else self._work_at_build),
             jnp.float32(spec.rebuild_factor),
@@ -435,6 +484,12 @@ class KnnSession:
             max_iters=spec.max_iters,
             executor=self.executor,
             plan=self.plan,
+        )
+        # thread the repeated-query feedback loop: next tick's boundaries
+        # see this tick's measured per-query work (device arrays, async)
+        self._qcost = aux.qcost_next
+        self._obj_bounds = (
+            aux.object_bounds if self.plan.object_axis_size > 1 else None
         )
         submit_s = time.perf_counter() - t0
         # key must mirror everything the jit cache keys on: shapes AND the
@@ -449,7 +504,7 @@ class KnnSession:
             tick=self._tick,
             nn_idx=nn_idx,
             nn_dist=nn_dist,
-            stats=stats,
+            aux=aux,
             should_rebuild=should_rebuild,
             nq=nq,
             qids=qids,

@@ -43,6 +43,10 @@ class ServiceSpec:
     # int for the 1-D plans (sharded / object_sharded), (query, object) pair
     # for hybrid, None = all devices (hybrid: most balanced factorization)
     mesh_shape: int | tuple[int, int] | None = None
+    # work partitioner for the plan's split axes ("equal" | "cost_balanced";
+    # repro.core.balance) — cost_balanced re-cuts shard boundaries every tick
+    # from the count-pyramid seed + the session's measured-work EMA
+    partitioner: str = "equal"
     max_iters: int = 100_000
     origin: tuple[float, float] = (0.0, 0.0)
     side: float = SIDE_DEFAULT
@@ -52,6 +56,7 @@ class ServiceSpec:
         validate_engine_params(
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
+            partitioner=self.partitioner,
         )
         if self.side <= 0:
             raise ValueError(f"side must be > 0, got {self.side}")
@@ -67,7 +72,7 @@ class ServiceSpec:
             window=self.window, chunk=self.chunk,
             rebuild_factor=self.rebuild_factor, region_pad=self.region_pad,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
-            max_iters=self.max_iters,
+            partitioner=self.partitioner, max_iters=self.max_iters,
         )
 
     @classmethod
@@ -84,7 +89,8 @@ class ServiceSpec:
             k=cfg.k, th_quad=cfg.th_quad, l_max=cfg.l_max, window=cfg.window,
             chunk=cfg.chunk, rebuild_factor=cfg.rebuild_factor,
             region_pad=cfg.region_pad, backend=cfg.backend, plan=cfg.plan,
-            mesh_shape=cfg.mesh_shape, max_iters=cfg.max_iters,
+            mesh_shape=cfg.mesh_shape, partitioner=cfg.partitioner,
+            max_iters=cfg.max_iters,
             origin=(float(origin[0]), float(origin[1])), side=float(side),
             delta_pad=delta_pad,
         )

@@ -1,9 +1,18 @@
 """The paper's contribution: iterated batched k-NN over moving objects, in JAX."""
+from .balance import (
+    CostBalancedPartitioner,
+    EqualPartitioner,
+    Partitioner,
+    partitioner_names,
+    resolve_partitioner,
+    straggler_gap,
+)
 from .baseline import knn_bruteforce, knn_bruteforce_chunked
 from .cpu_ref import KDTree
 from .executor import (
     QueryExecutor,
     available_backends,
+    available_partitioners,
     available_plans,
     resolve_executor,
     resolve_plan,
@@ -14,6 +23,7 @@ from .plan import (
     ExecutionPlan,
     HybridPlan,
     ObjectShardedPlan,
+    PlanAux,
     ShardedPlan,
     SinglePlan,
     knn_chunked_device,
@@ -39,8 +49,16 @@ __all__ = [
     "knn_bruteforce_chunked",
     "KDTree",
     "QueryExecutor",
+    "Partitioner",
+    "EqualPartitioner",
+    "CostBalancedPartitioner",
+    "PlanAux",
     "available_backends",
+    "available_partitioners",
     "available_plans",
+    "partitioner_names",
+    "resolve_partitioner",
+    "straggler_gap",
     "resolve_executor",
     "resolve_plan",
     "find_kdist",

@@ -33,6 +33,7 @@ __all__ = [
     "resolve_executor",
     "available_backends",
     "available_plans",
+    "available_partitioners",
     "resolve_plan",
 ]
 
@@ -47,6 +48,14 @@ def available_plans() -> tuple[str, ...]:
     from .plan import plan_names  # lazy: plan.py imports pipeline -> executor
 
     return plan_names()
+
+
+def available_partitioners() -> tuple[str, ...]:
+    """Names accepted by ``EngineConfig.partitioner`` — the third seam axis
+    (work splitting), configured at the same boundary as backend and plan."""
+    from .balance import partitioner_names
+
+    return partitioner_names()
 
 
 def __getattr__(name):

@@ -70,6 +70,15 @@ class KnnStats(NamedTuple):
     leaves_visited: jnp.ndarray  # () i32 — scheduled leaf scans (incl. own leaf)
 
 
+def zero_stats() -> KnnStats:
+    """All-zero stats — the masked-out chunk's contribution (core/plan.py)."""
+    return KnnStats(
+        iterations=jnp.int32(0),
+        candidates=jnp.float32(0.0),
+        leaves_visited=jnp.int32(0),
+    )
+
+
 class _State(NamedTuple):
     best_d: jnp.ndarray  # (Q, k) ascending squared dists, inf-padded
     best_i: jnp.ndarray  # (Q, k) object ids, -1 padded
@@ -83,7 +92,7 @@ class _State(NamedTuple):
     act_r: jnp.ndarray  # (Q,) bool
     next_right: jnp.ndarray  # (Q,) bool — alternation bit (paper Sec. 4.2.2)
     it: jnp.ndarray  # () i32
-    cand: jnp.ndarray  # () f32
+    cand_q: jnp.ndarray  # (Q,) f32 — candidate slots scanned PER QUERY (cost model)
     leaves: jnp.ndarray  # () i32
 
 
@@ -195,7 +204,7 @@ def _knn_sorted_impl(
         act_r=jnp.ones((nq,), bool),
         next_right=jnp.ones((nq,), bool),
         it=jnp.int32(0),
-        cand=jnp.float32(0.0),
+        cand_q=jnp.zeros((nq,), jnp.float32),
         leaves=(e0 > s0).sum().astype(jnp.int32),
     )
 
@@ -230,8 +239,11 @@ def _knn_sorted_impl(
         leaf_done = st.s_cur + off2 >= st.e_cur
         scanning = st.scanning & ~leaf_done
         off = jnp.where(st.scanning & ~leaf_done, off2, st.off)
-        # candidates stat counts scanned slots incl. the issuer (seed semantics)
-        cand = st.cand + in_window.sum().astype(jnp.float32)
+        # candidates stat counts scanned slots incl. the issuer (seed
+        # semantics), kept PER QUERY: the per-query totals are the measured
+        # work the cost-balanced partitioner's EMA feeds on (core/balance.py),
+        # and their sum is the global drift statistic as before
+        cand_q = st.cand_q + in_window.sum(axis=1).astype(jnp.float32)
 
         # ---------------- NAV: bounded frontier advance for idle active queries.
         nav = ~scanning & (st.act_l | st.act_r)
@@ -287,13 +299,15 @@ def _knn_sorted_impl(
             act_r=act_r,
             next_right=next_right,
             it=st.it + 1,
-            cand=cand,
+            cand_q=cand_q,
             leaves=leaves,
         )
 
     st = jax.lax.while_loop(cond, body, state)
-    stats = KnnStats(iterations=st.it, candidates=st.cand, leaves_visited=st.leaves)
-    return st.best_i, st.best_d, stats
+    stats = KnnStats(
+        iterations=st.it, candidates=st.cand_q.sum(), leaves_visited=st.leaves
+    )
+    return st.best_i, st.best_d, stats, st.cand_q
 
 
 _knn_sorted = jax.jit(
@@ -361,7 +375,7 @@ def knn_query_batch(
     max_nav = _resolve_max_nav(index, max_nav)
     # spatial sort of queries (locality for z_map lookups & frontier coherence)
     order, inv = _sort_unsort(index, qpos)
-    idx_s, d2_s, stats = _knn_sorted(
+    idx_s, d2_s, stats, _ = _knn_sorted(
         index, qpos[order], qid[order], k, window, max_nav, max_iters, executor
     )
     return idx_s[inv], jnp.sqrt(d2_s[inv]), stats

@@ -40,10 +40,16 @@ the query sweep (``EngineConfig.plan`` / ``mesh_shape``; DESIGN.md §10/§12):
 the Morton-sorted batch with ``shard_map``; ``object_sharded`` splits the
 *object* set into Morton-contiguous slices with a local quadtree per device
 and merge-reduces per-query lists; ``hybrid`` composes both on a 2-D
-``("query", "object")`` mesh (``mesh_shape`` becomes a pair).  Drift
-statistics come back ``psum``-reduced over every mesh axis so the rebuild
-trigger sees the whole tick's volume; :func:`object_shard_of` evaluates the
-object-shard ownership rule for the session's delta routing.
+``("query", "object")`` mesh (``mesh_shape`` becomes a pair).  How each
+split axis is CUT is the partitioner's job (``EngineConfig.partitioner``;
+DESIGN.md §13): ``equal`` keeps the static equal-count splits,
+``cost_balanced`` re-balances boundaries every tick from the count-pyramid
+seed plus the per-query cost EMA threaded through the step.  Per-shard
+candidate/iteration counters come back gathered over every mesh axis
+(``TickResult.shard_candidates`` — the straggler-gap metric); their sum is
+the whole-tick volume the rebuild trigger reads; :func:`object_shard_of`
+evaluates the object-shard ownership rule (capacity or boundary form) for
+the session's delta routing.
 """
 from __future__ import annotations
 
@@ -56,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .balance import partitioner_names
 from .executor import QueryExecutor, available_backends, available_plans
 from .plan import ExecutionPlan
 from .quadtree import reindex_objects
@@ -71,15 +78,17 @@ __all__ = [
 ]
 
 
-def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None):
+def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None,
+                           partitioner=None):
     """Eager validation shared by ``EngineConfig`` and ``repro.api.ServiceSpec``.
 
     Raises ``ValueError`` with the full registry listing for unknown
-    ``backend``/``plan`` names (instead of the deep registry ``KeyError`` that
-    used to surface on first use), and rejects geometry that the chunked sweep
-    cannot serve (``chunk`` not a multiple of ``window``, ``k > chunk``).
-    Instances (``QueryExecutor`` / ``ExecutionPlan``) pass through unchecked —
-    they validated themselves on construction.
+    ``backend``/``plan``/``partitioner`` names (instead of the deep registry
+    ``KeyError`` that used to surface on first use), and rejects geometry
+    that the chunked sweep cannot serve (``chunk`` not a multiple of
+    ``window``, ``k > chunk``).  Instances (``QueryExecutor`` /
+    ``ExecutionPlan`` / ``Partitioner``) pass through unchecked — they
+    validated themselves on construction.
     """
     if isinstance(backend, str) and backend not in available_backends():
         raise ValueError(
@@ -90,6 +99,11 @@ def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None):
         raise ValueError(
             f"unknown execution plan {plan!r}; registered plans: "
             f"{available_plans()}"
+        )
+    if isinstance(partitioner, str) and partitioner not in partitioner_names():
+        raise ValueError(
+            f"unknown partitioner {partitioner!r}; registered partitioners: "
+            f"{partitioner_names()}"
         )
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
@@ -135,19 +149,24 @@ class EngineConfig:
     # object_sharded), a (query, object) pair for hybrid; None = all devices
     # (hybrid: the most balanced factorization of the device count)
     mesh_shape: int | tuple[int, int] | None = None
+    # work partitioner for the plan's split axes (balance.partitioner_names():
+    # "equal" = the static equal-count splits, "cost_balanced" = skew-adaptive
+    # boundaries from the count-pyramid seed + measured-work EMA)
+    partitioner: str = "equal"
     max_iters: int = 100_000
 
     def __post_init__(self):
         validate_engine_params(
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
+            partitioner=self.partitioner,
         )
 
 
 @dataclasses.dataclass
 class TickResult:
     tick: int
-    nn_idx: np.ndarray  # (Q, k)
+    nn_idx: np.ndarray  # (Q, k); device arrays under result(materialize=False)
     nn_dist: np.ndarray  # (Q, k)
     rebuilt: bool
     wall_s: float  # submit -> results materialized, EXCLUDING compile_s
@@ -155,6 +174,11 @@ class TickResult:
     iterations: int
     compile_s: float = 0.0  # trace+compile time, nonzero on first-shape ticks
     qids: np.ndarray | None = None  # (Q,) registry qids, row-aligned with nn_*
+    # per-shard measured work, one entry per mesh device (1 for the single
+    # plan); candidates sums to `candidates` bitwise (PlanAux contract) and
+    # max/mean of it is the straggler gap (repro.core.balance.straggler_gap)
+    shard_candidates: np.ndarray | None = None  # (R_total,) f32
+    shard_iterations: np.ndarray | None = None  # (R_total,) i32
 
 
 @partial(
@@ -167,6 +191,7 @@ def _tick_step(
     positions,
     qpos,
     qid,
+    qcost,
     work_at_build,
     rebuild_factor,
     *,
@@ -178,14 +203,17 @@ def _tick_step(
     executor: QueryExecutor,
     plan: ExecutionPlan,
 ):
-    """(index, P_tau, Q_tau) -> (index', R_tau, stats, should_rebuild).
+    """(index, P_tau, Q_tau) -> (index', R_tau, aux, should_rebuild).
 
     One fused device program per tick: reindex + the plan's query sweep +
     drift check.  The step is built *per plan* (a static argument, like the
     executor): under the ``single`` plan the sweep is the chunked one-device
     ``lax.map``; under ``sharded`` it is the ``shard_map`` fan-out over the
-    ``("query",)`` mesh with the refreshed index replicated and the stats
-    ``psum``-reduced, so the drift comparison below sees whole-tick volume.
+    ``("query",)`` mesh with the refreshed index replicated; the gathered
+    per-shard counters (``aux.shard_candidates``) sum to whole-tick volume,
+    which is what the drift comparison below reads.  ``qcost`` is the
+    per-query cost EMA the session threads across ticks (zeros = cold); the
+    cost-balanced partitioner turns it into next tick's shard boundaries.
     On ticks whose index was just built from these exact positions the
     reindex is a semantic no-op; running it anyway keeps ONE compiled program
     (a static skip flag would double the compile for a microseconds-scale
@@ -205,10 +233,11 @@ def _tick_step(
     padded query registry); this step never touches the host boundary.
     """
     index = reindex_objects(index, positions)
-    nn_idx, nn_dist, stats = plan.run(
+    nn_idx, nn_dist, aux = plan.run(
         index,
         qpos,
         qid,
+        qcost,
         k=k,
         window=window,
         chunk=chunk,
@@ -216,20 +245,23 @@ def _tick_step(
         max_iters=max_iters,
         executor=executor,
     )
-    should_rebuild = stats.candidates > rebuild_factor * work_at_build
-    return index, nn_idx, nn_dist, stats, should_rebuild
+    should_rebuild = aux.stats.candidates > rebuild_factor * work_at_build
+    return index, nn_idx, nn_dist, aux, should_rebuild
 
 
 @partial(jax.jit, static_argnames=("num_shards",))
-def object_shard_of(index, ids, num_shards: int):
+def object_shard_of(index, ids, num_shards: int, bounds=None):
     """Owning object shard of each object id under the live index.
 
-    Evaluates the shard-ownership rule of DESIGN.md §12 device-side: an
-    object's owner is its Morton *rank* in the current index divided by the
-    shard capacity ``ceil(N / num_shards)`` — the same slicing the
-    object-sharded plans apply inside the tick step.  Ownership must be
-    re-derived from the index each tick because objects change rank as they
-    move.  Returns (m,) int32 shard indices in ``[0, num_shards)``.
+    Evaluates the shard-ownership rule of DESIGN.md §12/§13 device-side: an
+    object's owner is determined by its Morton *rank* in the current index —
+    rank divided by the shard capacity ``ceil(N / num_shards)`` under the
+    equal partition, or the boundary interval containing the rank
+    (``searchsorted``) when ``bounds`` carries the (R+1,) Morton-row
+    boundaries a cost-balanced tick actually used
+    (``PlanAux.object_bounds``).  Ownership must be re-derived from the
+    index each tick because objects change rank as they move.  Returns (m,)
+    int32 shard indices in ``[0, num_shards)``.
 
     ``ids`` must be in ``[0, index.n_objects)`` — jnp's clamping gather
     would otherwise return confidently wrong owners for stale ids, so the
@@ -244,29 +276,36 @@ def object_shard_of(index, ids, num_shards: int):
         .at[index.ids]
         .set(jnp.arange(n, dtype=jnp.int32))
     )
-    cap = object_shard_capacity(n, num_shards)
-    return rank[jnp.asarray(ids, jnp.int32)] // cap
+    r = rank[jnp.asarray(ids, jnp.int32)]
+    if bounds is None:
+        cap = object_shard_capacity(n, num_shards)
+        return r // cap
+    return (jnp.searchsorted(bounds, r, side="right") - 1).astype(jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("num_shards",))
-def route_delta(index, ids, new_pos, num_shards: int):
+def route_delta(index, ids, new_pos, num_shards: int, bounds=None):
     """Group a (sentinel-padded) delta batch by owning shard, device-side.
 
     Stable-sorts the batch rows by :func:`object_shard_of` ownership
     (sentinel rows — ``id >= N``, dropped by the scatter — sort last as a
     virtual shard ``num_shards``) and returns the reordered ``(ids,
-    new_pos)``.  Runs entirely on device: no host readback, so delta staging
-    keeps the async-dispatch property the session's overlap contract relies
-    on.  Today the positions buffer is replicated and the grouping is a pure
-    reorder of unique ids (bit-identical results, pinned by the routing-edge
-    regressions in tests/test_api.py); it stages the memory layout a
-    per-shard-resident positions buffer will scatter as contiguous runs.
+    new_pos)``.  ``bounds`` forwards the cost-balanced boundary rule when
+    the session has a completed tick's partition on hand.  Runs entirely on
+    device: no host readback, so delta staging keeps the async-dispatch
+    property the session's overlap contract relies on.  Today the positions
+    buffer is replicated and the grouping is a pure reorder of unique ids
+    (bit-identical results, pinned by the routing-edge regressions in
+    tests/test_api.py); it stages the memory layout a per-shard-resident
+    positions buffer will scatter as contiguous runs.
     """
     n = index.n_objects
     ids = jnp.asarray(ids, jnp.int32)
     shard = jnp.where(
         ids < n,
-        object_shard_of(index, jnp.clip(ids, 0, max(n - 1, 0)), num_shards),
+        object_shard_of(
+            index, jnp.clip(ids, 0, max(n - 1, 0)), num_shards, bounds
+        ),
         num_shards,
     )
     order = jnp.argsort(shard)  # jnp.argsort is stable by default

@@ -6,6 +6,18 @@ skewness controlled by the hotspot count) and *road network* (objects moving
 along the edges of a network; we synthesize a jittered-grid network since the
 San Francisco edge file is not available offline — noted in DESIGN.md §9).
 
+Two further presets stress the skew axis the paper's headline claim covers
+("highly skewed spatial distributions") — shared by the partitioner
+benchmarks (benchmarks/s7_skew.py) and the property harness
+(tests/test_properties.py) instead of each hand-rolling skewed clouds:
+
+* *zipf* — ``clusters`` hotspot centers whose populations follow a Zipf law
+  with exponent ``zipf_a`` (most mass in one tiny region: deep trees, long
+  scan intervals, maximally uneven equal-count shards);
+* *hotspot_cluster* — a ``cluster_frac`` share of objects packed into
+  ``clusters`` tight gaussian hotspots over a uniform background (dense
+  islands in sparse seas — the straggler scenario for query sharding).
+
 Defaults match Table 1: squared region of side 22500 u, max speed 200 u/tick,
 one query per object per tick (query rate 100 %).
 """
@@ -24,12 +36,16 @@ MAX_SPEED_DEFAULT = 200.0
 @dataclasses.dataclass(frozen=True)
 class WorkloadConfig:
     n_objects: int = 100_000
-    distribution: str = "uniform"  # uniform | gaussian | network
+    # uniform | gaussian | network | zipf | hotspot_cluster
+    distribution: str = "uniform"
     side: float = SIDE_DEFAULT
     max_speed: float = MAX_SPEED_DEFAULT
     hotspots: int = 25  # gaussian: more hotspots -> closer to uniform
     hotspot_sigma_frac: float = 1.0 / 64.0  # sigma = side * frac
     network_grid: int = 24  # network: grid nodes per side
+    zipf_a: float = 1.6  # zipf: cluster-population exponent (higher = denser)
+    clusters: int = 12  # zipf / hotspot_cluster: number of cluster centers
+    cluster_frac: float = 0.75  # hotspot_cluster: share of objects clustered
     seed: int = 0
 
 
@@ -50,6 +66,32 @@ class MovingObjectWorkload:
             self.pos = (
                 centers[which] + self.rng.normal(0, sigma, size=(n, 2))
             ).astype(np.float32)
+            self.pos = np.clip(self.pos, 0, side - 1e-3)
+            self.vel = self._rand_vel(n)
+        elif cfg.distribution == "zipf":
+            # cluster populations ~ Zipf(zipf_a): rank-r cluster draws a
+            # 1/r^a share of the objects — the partitioner stress preset
+            centers = self.rng.uniform(0, side, size=(cfg.clusters, 2))
+            weights = 1.0 / np.arange(1, cfg.clusters + 1) ** cfg.zipf_a
+            which = self.rng.choice(
+                cfg.clusters, size=n, p=weights / weights.sum()
+            )
+            sigma = side * cfg.hotspot_sigma_frac
+            self.pos = (
+                centers[which] + self.rng.normal(0, sigma, size=(n, 2))
+            ).astype(np.float32)
+            self.pos = np.clip(self.pos, 0, side - 1e-3)
+            self.vel = self._rand_vel(n)
+        elif cfg.distribution == "hotspot_cluster":
+            # cluster_frac of the mass in `clusters` tight equal hotspots,
+            # the rest a uniform background (dense islands in sparse seas)
+            centers = self.rng.uniform(0, side, size=(cfg.clusters, 2))
+            n_cl = int(round(n * cfg.cluster_frac))
+            which = self.rng.integers(0, cfg.clusters, size=n_cl)
+            sigma = side * cfg.hotspot_sigma_frac / 4.0
+            clustered = centers[which] + self.rng.normal(0, sigma, (n_cl, 2))
+            background = self.rng.uniform(0, side, size=(n - n_cl, 2))
+            self.pos = np.concatenate([clustered, background]).astype(np.float32)
             self.pos = np.clip(self.pos, 0, side - 1e-3)
             self.vel = self._rand_vel(n)
         elif cfg.distribution == "network":
@@ -122,7 +164,7 @@ class MovingObjectWorkload:
     def advance(self):
         """Move every object by one tick (<= max_speed displacement)."""
         cfg = self.cfg
-        if cfg.distribution in ("uniform", "gaussian"):
+        if cfg.distribution in ("uniform", "gaussian", "zipf", "hotspot_cluster"):
             # speed random-walk as in [2]: perturb velocity, clamp magnitude
             self.vel += self.rng.normal(0, 0.1 * cfg.max_speed, self.vel.shape).astype(
                 np.float32

@@ -41,7 +41,8 @@ from repro.models import (
 def serve_knn(args) -> int:
     session = KnnSession(
         ServiceSpec(k=args.k, th_quad=args.th_quad, l_max=args.l_max,
-                    chunk=args.chunk, plan=args.plan)
+                    chunk=args.chunk, plan=args.plan,
+                    partitioner=args.partitioner)
     )
     w = make_workload(args.objects, args.distribution, seed=args.seed)
     tput = []
@@ -139,6 +140,7 @@ def main(argv=None) -> int:
     k.add_argument("--chunk", type=int, default=8192)
     k.add_argument("--distribution", default="uniform")
     k.add_argument("--plan", default="single")
+    k.add_argument("--partitioner", default="equal")
     k.add_argument("--seed", type=int, default=0)
     m = sub.add_parser("lm")
     m.add_argument("--arch", default="rwkv6_3b", choices=list(ARCH_IDS))

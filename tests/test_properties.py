@@ -13,6 +13,13 @@ plan's ``dense_topk`` reference, which itself must match the kd-tree oracle
 (distances exactly per rank; ids as sets strictly below the k-th distance,
 where the oracle's own tie order is not canonical).
 
+Since the Partitioner seam (DESIGN.md §13) the matrix has a third axis: the
+mesh plans run under BOTH registered partitioners — ``equal`` (the static
+equal-count splits) and ``cost_balanced`` (skew-adaptive boundaries from the
+count-pyramid cost seed) — and must stay bit-identical either way: the
+partitioner only moves chunk/slice boundaries, and results are a pure
+function of the candidate set.
+
 Runs on however many devices exist: the tier-1 job exercises the matrix on
 1 device, the tier1-multidevice job on a forced 8-device grid where
 ``sharded``/``object_sharded`` lay real 8-way meshes and ``hybrid`` the 2x4
@@ -36,24 +43,31 @@ from repro.core import (
     knn_query_batch_chunked,
     object_shard_capacity,
 )
+from repro.data import make_workload
 from repro.kernels import tree_merge_lists
 from repro.launch.mesh import default_hybrid_shape
 
 NDEV = jax.device_count()
 SIDE = 22_500.0
 
-# (plan, mesh_shape): every registered plan, laid across every visible device
+# (plan, mesh_shape, partitioner): every registered plan across every visible
+# device, the mesh plans under both registered partitioners
 PLAN_GRID = (
-    ("single", None),
-    ("sharded", NDEV),
-    ("object_sharded", NDEV),
-    ("hybrid", default_hybrid_shape(NDEV)),
+    ("single", None, "equal"),
+    ("sharded", NDEV, "equal"),
+    ("sharded", NDEV, "cost_balanced"),
+    ("object_sharded", NDEV, "equal"),
+    ("object_sharded", NDEV, "cost_balanced"),
+    ("hybrid", default_hybrid_shape(NDEV), "equal"),
+    ("hybrid", default_hybrid_shape(NDEV), "cost_balanced"),
 )
 
 
 def _cloud(seed: int, n: int, family: int, dup_every: int, zipf_a: float):
     """One object cloud: 0=uniform, 1=gaussian hotspots, 2=Zipf-skewed
-    clusters; ``dup_every > 1`` overlays exact coincident duplicates."""
+    clusters (the ``zipf`` generator preset — most mass in one tiny region:
+    deep tree + long scan intervals + uneven shards); ``dup_every > 1``
+    overlays exact coincident duplicates."""
     rng = np.random.default_rng(seed)
     if family == 0:
         pts = rng.uniform(0, SIDE, (n, 2))
@@ -61,13 +75,10 @@ def _cloud(seed: int, n: int, family: int, dup_every: int, zipf_a: float):
         c = rng.uniform(0, SIDE, (4, 2))
         pts = c[rng.integers(0, 4, n)] + rng.normal(0, SIDE * 0.01, (n, 2))
     else:
-        # extreme skew: cluster populations ~ Zipf(a) — most mass lands in
-        # one tiny region (deep tree + long scan intervals + uneven shards)
-        ncl = 12
-        c = rng.uniform(0, SIDE, (ncl, 2))
-        w = 1.0 / np.arange(1, ncl + 1) ** zipf_a
-        pts = c[rng.choice(ncl, size=n, p=w / w.sum())]
-        pts = pts + rng.normal(0, SIDE * 0.002, (n, 2))
+        pts = make_workload(
+            n, "zipf", seed=seed, zipf_a=zipf_a, clusters=12,
+            hotspot_sigma_frac=0.002, side=SIDE,
+        ).positions()
     if dup_every > 1:
         base = pts[: max(1, n // dup_every)]
         pts = np.tile(base, (dup_every + 1, 1))[:n]
@@ -101,10 +112,10 @@ def _check_oracle(pts, qpos, qid, ii, dd, k):
         assert want == got, (r, want, got)
 
 
-def _sweep(idx, qpos, qid, *, k, backend, plan, mesh):
+def _sweep(idx, qpos, qid, *, k, backend, plan, mesh, partitioner="equal"):
     ii, dd, _ = knn_query_batch_chunked(
         idx, qpos, qid, k=k, window=16, chunk=16, backend=backend,
-        plan=plan, num_devices=mesh,
+        plan=plan, num_devices=mesh, partitioner=partitioner,
     )
     return ii, dd
 
@@ -117,12 +128,14 @@ def _sweep(idx, qpos, qid, *, k, backend, plan, mesh):
     st.floats(min_value=1.2, max_value=3.5),     # zipf_a
 )
 def test_full_matrix_bit_identical(seed, family, dup_every, zipf_a):
-    """Every plan == that backend's single-plan reference, bitwise, for every
-    backend; backends cross-agree up to distance rounding; the dense
-    reference matches the kd-tree oracle.
+    """Every plan × partitioner == that backend's single-plan reference,
+    bitwise, for every backend; backends cross-agree up to distance
+    rounding; the dense reference matches the kd-tree oracle.
 
-    Bit-identity is asserted *per backend across the whole plan grid* — the
-    canonical-selection guarantee (DESIGN.md §12).  Across backends only the
+    Bit-identity is asserted *per backend across the whole plan ×
+    partitioner grid* — the canonical-selection guarantee (DESIGN.md
+    §12/§13): partitioners only move chunk/slice boundaries, and results
+    are a pure function of the candidate set.  Across backends only the
     distance VALUES are compared (1-ulp tolerance): XLA fuses the f32
     ``dx*dx + dy*dy`` with FMA differently per backend's surrounding graph,
     so cross-backend bits differ in the last place on tied inputs while each
@@ -143,13 +156,13 @@ def test_full_matrix_bit_identical(seed, family, dup_every, zipf_a):
         # cross-backend: same candidates up to last-place distance rounding
         np.testing.assert_allclose(
             base_d, ref_d, rtol=1e-6, err_msg=f"dists {backend} vs dense")
-        for plan, mesh in PLAN_GRID[1:]:
+        for plan, mesh, part in PLAN_GRID[1:]:
             ii, dd = _sweep(idx, qpos, qid, k=k, backend=backend,
-                            plan=plan, mesh=mesh)
+                            plan=plan, mesh=mesh, partitioner=part)
             np.testing.assert_array_equal(
-                ii, base_i, err_msg=f"ids {backend}/{plan}")
+                ii, base_i, err_msg=f"ids {backend}/{plan}/{part}")
             np.testing.assert_array_equal(
-                dd, base_d, err_msg=f"dists {backend}/{plan}")
+                dd, base_d, err_msg=f"dists {backend}/{plan}/{part}")
 
 
 @settings(max_examples=5, deadline=None)
@@ -173,11 +186,11 @@ def test_fewer_objects_than_k_all_plans(seed, n, dup_every):
     # each query sees the other n-1 objects, then padding
     assert np.isinf(ref[1][:, n - 1:]).all()
     assert (ref[0][:, n - 1:] == -1).all()
-    for plan, mesh in PLAN_GRID[1:]:
+    for plan, mesh, part in PLAN_GRID[1:]:
         ii, dd = _sweep(idx, pts, qid, k=k, backend="dense_topk", plan=plan,
-                        mesh=mesh)
-        np.testing.assert_array_equal(ii, ref[0], err_msg=plan)
-        np.testing.assert_array_equal(dd, ref[1], err_msg=plan)
+                        mesh=mesh, partitioner=part)
+        np.testing.assert_array_equal(ii, ref[0], err_msg=f"{plan}/{part}")
+        np.testing.assert_array_equal(dd, ref[1], err_msg=f"{plan}/{part}")
 
 
 @pytest.mark.parametrize("r", [2, 3, 8])
@@ -221,7 +234,7 @@ def test_pipeline_r_way_partition_composes(r):
         local = plan_mod._local_index(
             opos[s * cap:(s + 1) * cap], oids[s * cap:(s + 1) * cap],
             idx.origin, idx.side, l_max=idx.l_max, th_quad=idx.th_quad)
-        ii, d2, _ = plan_mod._chunked_sweep(
+        ii, d2, _, _ = plan_mod._chunked_sweep(
             local, qs, qi, k=k, window=window, chunk=chunk,
             max_nav=_resolve_max_nav(idx, None), max_iters=100_000,
             executor=resolve_executor(None))
