@@ -1,56 +1,280 @@
-"""Roofline table from dry-run JSONL records (EXPERIMENTS.md §Roofline source).
+"""Per-stage roofline for the serving tick (DESIGN.md §14).
 
-Usage:
-  PYTHONPATH=src python -m benchmarks.roofline results/dryrun_baseline.jsonl
+Decomposes one steady tick into the four pipeline stages and puts each on a
+roofline: bytes moved, FLOPs, arithmetic intensity, and the memory-bound /
+compute-bound time under a configurable machine model.  Volumes come from
+the workload parameters plus MEASURED per-tick counters (candidate volume,
+iteration counts, ``TickResult.collect_s``) from a short live session — not
+from guessed densities — so the table justifies each optimisation against
+hardware limits rather than vibes:
+
+  reindex — Morton encode + sort + gather reorder of the object table.
+            Negligible FLOPs over ~N·log N bytes of sort traffic: firmly
+            bandwidth-bound, which is why the delta path's win is staging
+            bytes, not arithmetic.
+  sweep   — the distance/prune pass over the measured candidate volume.
+            fp32 reads 12 B/candidate; ``precision="mixed"`` reads bf16
+            positions (8 B/candidate with the id) and re-ranks only the
+            widened-boundary survivors in fp32 — the table carries both
+            variants so the bf16 pass is justified by its bytes column.
+  merge   — the R-way per-shard top-k list reduction.  Modeled both as the
+            binary merge tree (intermediate lists round-trip HBM between
+            MERGE calls) and as the fused single-pass multi-way kernel
+            (``merge="fused_multi"``: partial lists read once) — the bytes
+            ratio ≈ 3(R−1)/(R+1) is the fusion's justification.
+  collect — device→host result delivery per ``collect`` mode (structural
+            bytes, same model as s6_serving) with the measured per-tick
+            ``collect_s`` alongside, so achieved transfer cost is visible
+            next to the modeled one.
+
+  PYTHONPATH=src python benchmarks/roofline.py [--objects N] [--queries Q]
+      [--peak-gflops F] [--peak-gbs B] [--obj-shards R]
+      [--out ROOFLINE_stages.json]
+
+The machine peaks default to generic CPU-host numbers; pass the target
+accelerator's to move the ridge point.  The stage *volumes* are machine-
+independent.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import math
+import os
 import sys
+import time
+
+COLLECT_MODES = ("full", "stats", "none")
 
 
-def load(path: str):
-    recs = []
-    with open(path) as f:
-        for line in f:
-            recs.append(json.loads(line))
-    return recs
+def _measure(objects, queries, ticks, k, chunk, window, update_fraction):
+    """Short live session per collect mode: measured counters, not guesses.
+
+    Returns (candidates_per_tick, iterations_per_tick,
+    collect_ms_per_tick[mode], steady_tick_s) — candidate volume is identical
+    across collect modes (same sweep), so it is taken from the "full" run.
+    """
+    import numpy as np
+
+    from repro.api import KnnSession, ServiceSpec
+
+    rng = np.random.default_rng(0)
+    p0 = rng.uniform(0, 22_500, (objects, 2)).astype(np.float32)
+    qpos = rng.uniform(0, 22_500, (queries, 2)).astype(np.float32)
+    qid = np.full((queries,), -2, np.int32)
+    m = max(1, int(objects * update_fraction))
+
+    collect_ms = {}
+    cand = iters = steady = None
+    for mode in COLLECT_MODES:
+        spec = ServiceSpec(k=k, th_quad=192, l_max=7, window=window,
+                           chunk=chunk, collect=mode)
+        sess = KnnSession(spec)
+        sess.ingest_objects(p0)
+        sess.register_queries(qpos, qid)
+        sess.submit().result()  # compile + warmup tick
+        cs, ts, cands, its = [], [], [], []
+        for _ in range(ticks):
+            ids = rng.choice(objects, m, replace=False).astype(np.int32)
+            step = rng.uniform(-200, 200, (m, 2)).astype(np.float32)
+            t0 = time.perf_counter()
+            sess.update_objects(ids, np.clip(p0[ids] + step, 0, 22_499.0))
+            h = sess.submit()
+            h.block_until_ready()
+            res = h.result()
+            ts.append(time.perf_counter() - t0)
+            cs.append(res.collect_s)
+            cands.append(res.candidates)
+            its.append(res.iterations)
+        collect_ms[mode] = float(np.median(cs)) * 1e3
+        if mode == "full":
+            cand = float(np.median(cands))
+            iters = float(np.median(its))
+            steady = float(np.median(ts))
+    return cand, iters, collect_ms, steady
 
 
-def fmt_table(recs, mesh: str | None = "16x16"):
-    rows = []
-    hdr = (
-        f"{'arch':26s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} {'memory_s':>10s} "
-        f"{'coll_s':>10s} {'dom':>10s} {'GB/dev':>8s} {'useful':>7s}"
-    )
-    rows.append(hdr)
-    rows.append("-" * len(hdr))
-    for r in recs:
-        if mesh and r.get("mesh") != mesh:
-            continue
-        if r["status"] == "skip":
-            rows.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} {'— skipped: ' + r['reason']}")
-            continue
-        if r["status"] != "ok":
-            rows.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} ERROR {r.get('error','')[:60]}")
-            continue
-        t = r["roofline"]
-        mem = r.get("memory", {}).get("bytes_per_device", 0) / 1e9
+def _collected_bytes(collect, nq, q_padded, k, r_total=1, r_obj=1):
+    """Structural device->host bytes (kept in sync with s6_serving)."""
+    counters = r_total * 8
+    if collect == "none":
+        return 0
+    if collect == "stats":
+        return q_padded * 4 + 4 * 4 + r_obj * 4 + 4 + counters
+    return nq * k * 8 + counters
+
+
+def build_stages(objects, queries, q_padded, k, candidates, r_obj,
+                 collect_ms):
+    """The per-stage (bytes, flops) volumes.  Every count is a documented
+    first-order model over workload parameters + measured counters."""
+    n, c = objects, candidates
+    stages = []
+
+    # reindex: encode (read (x,y) f32, write code i32: ~30 bit-ops/pt),
+    # sort (code, id) pairs (radix-style: byte digits, read+write 8 B/pt
+    # per pass), gather-reorder positions+ids by sorted rank (12 B/pt r+w)
+    sort_passes = max(1, math.ceil(math.log2(max(n, 2)) / 8))
+    stages.append({
+        "stage": "reindex",
+        "bytes": n * 12 + sort_passes * 2 * n * 8 + 2 * n * 12,
+        "flops": n * 30,
+        "model": f"morton encode + {sort_passes}-pass sort + gather, N={n}",
+    })
+
+    # sweep: per candidate read the (x,y) position + id, ~8 flops
+    # (2 sub, 2 mul, 1 add, compare + amortized selection update)
+    stages.append({
+        "stage": "sweep[fp32]",
+        "bytes": int(c * 12),
+        "flops": int(c * 8),
+        "model": f"measured candidates/tick C={c:.0f}, 12 B + 8 flop each",
+    })
+    # mixed: the bf16 prune reads half the position bytes; the exact refine
+    # re-reads fp32 rows only for in-boundary survivors — structurally
+    # bounded by ~2 boundary shells of k per query (DESIGN.md §14)
+    refine = min(c, 2.0 * queries * k)
+    stages.append({
+        "stage": "sweep[mixed]",
+        "bytes": int(c * 8 + refine * 12),
+        "flops": int(c * 8 + refine * 8),
+        "model": f"bf16 prune over C + fp32 refine over <= 2Qk={refine:.0f}",
+    })
+
+    # merge: R-way reduction of per-shard (Q, k) lists, 8 B/entry; both
+    # variants do the same ~2k compare/select work per query per reduction
+    # step — the fusion's win is list bytes not round-tripping HBM
+    lists = q_padded * k * 8
+    merge_flops = int(q_padded * 2 * k * max(r_obj - 1, 0))
+    stages.append({
+        "stage": f"merge[tree,R={r_obj}]",
+        "bytes": int(lists * 3 * max(r_obj - 1, 0)),
+        "flops": merge_flops,
+        "model": "binary tree: each of R-1 merges reads 2 + writes 1 list",
+    })
+    stages.append({
+        "stage": f"merge[fused,R={r_obj}]",
+        "bytes": int(lists * (r_obj + 1)) if r_obj > 1 else 0,
+        "flops": merge_flops,
+        "model": "fused multi-way: R lists read once, 1 written "
+                 "(merge='fused_multi')",
+    })
+
+    # collect: structural transfer bytes per mode + the measured cost
+    for mode in COLLECT_MODES:
+        stages.append({
+            "stage": f"collect[{mode}]",
+            "bytes": _collected_bytes(mode, queries, q_padded, k,
+                                      r_obj=r_obj),
+            "flops": 0,
+            "measured_ms": collect_ms.get(mode),
+            "model": "structural device->host bytes (s6_serving model)",
+        })
+    return stages
+
+
+def annotate(stages, peak_gflops, peak_gbs):
+    """Roofline arithmetic: bound times + dominant limit per stage."""
+    for s in stages:
+        t_mem = s["bytes"] / (peak_gbs * 1e9)
+        t_flop = s["flops"] / (peak_gflops * 1e9)
+        s["intensity_flops_per_byte"] = (
+            s["flops"] / s["bytes"] if s["bytes"] else 0.0)
+        s["memory_s"] = t_mem
+        s["compute_s"] = t_flop
+        s["bound_s"] = max(t_mem, t_flop)
+        s["dominant"] = "memory" if t_mem >= t_flop else "compute"
+    return stages
+
+
+def fmt_table(stages):
+    hdr = (f"{'stage':18s} {'MB':>9s} {'MFLOP':>9s} {'F/B':>7s} "
+           f"{'mem_ms':>8s} {'cmp_ms':>8s} {'bound':>7s} {'meas_ms':>8s}")
+    rows = [hdr, "-" * len(hdr)]
+    for s in stages:
+        meas = s.get("measured_ms")
+        meas_str = f"{meas:8.3f}" if meas is not None else f"{'—':>8s}"
         rows.append(
-            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} {t['compute_s']:10.4f} "
-            f"{t['memory_s']:10.4f} {t['collective_s']:10.4f} {t['dominant']:>10s} "
-            f"{mem:8.1f} {t.get('useful_flops_ratio', 0):7.3f}"
+            f"{s['stage']:18s} {s['bytes'] / 1e6:9.3f} "
+            f"{s['flops'] / 1e6:9.2f} {s['intensity_flops_per_byte']:7.2f} "
+            f"{s['memory_s'] * 1e3:8.3f} {s['compute_s'] * 1e3:8.3f} "
+            f"{s['dominant']:>7s} {meas_str}"
         )
     return "\n".join(rows)
 
 
-def main(argv=None):
-    args = argv or sys.argv[1:]
-    path = args[0] if args else "results/dryrun_baseline.jsonl"
-    recs = load(path)
-    for mesh in ("16x16", "2x16x16"):
-        print(f"\n=== mesh {mesh} ===")
-        print(fmt_table(recs, mesh))
+def run(
+    objects: int = 50_000,
+    queries: int = 4_096,
+    ticks: int = 5,
+    k: int = 16,
+    chunk: int = 4_096,
+    window: int = 128,
+    update_fraction: float = 0.05,
+    obj_shards: int = 8,
+    peak_gflops: float = 100.0,
+    peak_gbs: float = 25.0,
+    out: str | None = "ROOFLINE_stages.json",
+):
+    from repro.core import pad_capacity
+
+    cand, iters, collect_ms, steady = _measure(
+        objects, queries, ticks, k, chunk, window, update_fraction)
+    q_padded = pad_capacity(queries, chunk)
+    stages = annotate(
+        build_stages(objects, queries, q_padded, k, cand, obj_shards,
+                     collect_ms),
+        peak_gflops, peak_gbs,
+    )
+    print(f"per-stage roofline: N={objects} Q={queries} k={k} "
+          f"C/tick={cand:.0f} iters={iters:.0f} "
+          f"steady={steady * 1e3:.1f} ms (measured, collect=full) "
+          f"@ {peak_gflops:.0f} GFLOP/s, {peak_gbs:.0f} GB/s")
+    print(fmt_table(stages))
+    if out:
+        rec = {
+            "schema": 1,
+            "objects": objects, "queries": queries, "k": k, "chunk": chunk,
+            "window": window, "ticks": ticks,
+            "update_fraction": update_fraction,
+            "obj_shards_modeled": obj_shards,
+            "peak_gflops": peak_gflops, "peak_gbs": peak_gbs,
+            "measured": {
+                "candidates_per_tick": cand,
+                "iterations_per_tick": iters,
+                "steady_tick_s_full": steady,
+                "collect_ms_per_tick": collect_ms,
+            },
+            "stages": stages,
+            "timestamp": time.time(),
+        }
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"# wrote {out}", flush=True)
+    return stages
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objects", type=int, default=50_000)
+    ap.add_argument("--queries", type=int, default=4_096)
+    ap.add_argument("--ticks", type=int, default=5)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4_096)
+    ap.add_argument("--window", type=int, default=128)
+    ap.add_argument("--update-fraction", type=float, default=0.05)
+    ap.add_argument("--obj-shards", type=int, default=8,
+                    help="R for the merge-stage model (the object-axis "
+                         "shard count the tree/fused comparison assumes)")
+    ap.add_argument("--peak-gflops", type=float, default=100.0)
+    ap.add_argument("--peak-gbs", type=float, default=25.0)
+    ap.add_argument("--out", default="ROOFLINE_stages.json")
+    args = ap.parse_args(argv)
+    run(objects=args.objects, queries=args.queries, ticks=args.ticks,
+        k=args.k, chunk=args.chunk, window=args.window,
+        update_fraction=args.update_fraction, obj_shards=args.obj_shards,
+        peak_gflops=args.peak_gflops, peak_gbs=args.peak_gbs, out=args.out)
     return 0
 
 

@@ -5,10 +5,12 @@ has a __main__ for full-size runs; this runner uses CPU-feasible defaults.
 
 ``--smoke`` runs a minutes-scale subset and writes ``BENCH_smoke.json``
 (queries/s + candidates/s per backend, engine tick latency, serving-mode
-rows) plus ``BENCH_serving_smoke.json`` (snapshot vs delta ingest x blocking
-vs overlapped submit, s6) and ``BENCH_skew_smoke.json`` (straggler gap:
-equal vs cost_balanced partitioner on a forced 8-device grid, s7) — the
-per-PR perf trajectory artifacts consumed by CI.  The plain
+rows) plus ``BENCH_serving_smoke.json`` (ingest x submit x collect mode,
+s6), ``ROOFLINE_stages_smoke.json`` (per-stage roofline: reindex/sweep/
+merge/collect bytes + FLOPs over measured counters) and
+``BENCH_skew_smoke.json`` (straggler gap: equal vs cost_balanced partitioner
+on a forced 8-device grid, s7) — the per-PR perf trajectory artifacts
+consumed by CI.  The plain
 ``BENCH_serving.json``/``BENCH_skew.json`` are committed full-size
 artifacts, regenerated only by full (non-smoke) runs.
 """
@@ -58,8 +60,8 @@ def _smoke(out_path: str) -> None:
     rec["engine"] = ticks
     rec["engine_sharded"] = engine_row("dense_topk", "sharded")
 
-    # serving-mode sweep (session API): snapshot vs delta x blocking vs
-    # overlapped, reduced size.  Written under a _smoke name: the plain
+    # serving-mode sweep (session API): ingest x submit x collect mode,
+    # reduced size.  Written under a _smoke name: the plain
     # BENCH_serving.json is the committed full-size (50K x 30) artifact and
     # must not be clobbered by smoke runs.
     from benchmarks import s6_serving
@@ -67,6 +69,16 @@ def _smoke(out_path: str) -> None:
     rec["serving"] = s6_serving.run(
         objects=4_000, ticks=4, k=16, chunk=1024, window=128,
         out="BENCH_serving_smoke.json",
+    )
+
+    # per-stage roofline (reindex/sweep/merge/collect) at smoke size — the
+    # stage volume model over measured counters; full-size table comes from
+    # a plain `python benchmarks/roofline.py` run (ROOFLINE_stages.json)
+    from benchmarks import roofline
+
+    rec["roofline_stages"] = roofline.run(
+        objects=4_000, queries=1_024, ticks=3, chunk=1024,
+        out="ROOFLINE_stages_smoke.json",
     )
 
     # skew row: the partitioner seam's straggler-gap probe on a forced
@@ -127,23 +139,17 @@ def main() -> None:
     s4_backends.run(n_objects=20_000, k=32, out="BENCH_backends.json")
     s5_scaling.run(objects=8_000, ticks=4, out="BENCH_scaling.json")
     s7_skew.run(objects=4_096, ticks=4, out="BENCH_skew.json")
-    # full scale matches the committed artifact (50K objects x 30 ticks) so a
-    # full run regenerates BENCH_serving.json at its documented size
-    s6_serving.run(objects=50_000, queries=16_384, ticks=30,
+    # full scale matches the committed artifact (50K objects x 4096 queries
+    # x 30 ticks) so a full run regenerates BENCH_serving.json at its
+    # documented size
+    s6_serving.run(objects=50_000, queries=4_096, ticks=30, passes=6,
                    out="BENCH_serving.json")
     kernels.run(q=64, c=512, k=16)
 
-    # roofline summary (optimized defaults if recorded, else baseline)
-    res = os.path.join(os.path.dirname(__file__), "..", "results")
-    path = os.path.join(res, "dryrun_opt.jsonl")
-    if not os.path.exists(path):
-        path = os.path.join(res, "dryrun_baseline.jsonl")
-    if os.path.exists(path):
-        from benchmarks import roofline
+    # per-stage roofline at the committed serving config
+    from benchmarks import roofline
 
-        recs = roofline.load(path)
-        print()
-        print(roofline.fmt_table(recs, "16x16"))
+    roofline.run(out="ROOFLINE_stages.json")
 
 
 if __name__ == "__main__":

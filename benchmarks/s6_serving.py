@@ -1,20 +1,27 @@
-"""S6: serving-path sweep — snapshot vs delta ingest × blocking vs overlapped.
+"""S6: serving-path sweep — ingest × submit × collect mode.
 
-The axis introduced by the session API (repro.api, DESIGN.md §11).  The
+The axes introduced by the session API (repro.api, DESIGN.md §11/§14).  The
 scenario is the paper's motivating one: a persistent set of monitoring
 queries served every tick, while only a *fraction* of the object population
 reports a position update per tick.
 
-  snapshot_blocking    — the PR-1/PR-2 contract: TickEngine.process_tick
-                         re-uploads the full position snapshot AND re-stages
-                         the full query batch every tick, blocking on results.
-  snapshot_overlapped  — KnnSession with full-snapshot ingest but persistent
-                         registered queries and one tick of submit-ahead.
-  delta_blocking       — KnnSession: device-side scatter of the moved
-                         fraction, persistent queries, blocking collect.
-  delta_overlapped     — delta ingest + submit τ+1 while τ is in flight:
-                         the paper's pipeline (host staging and result
-                         readback double-buffered against device compute).
+  snapshot_blocking       — the PR-1/PR-2 contract: TickEngine.process_tick
+                            re-uploads the full position snapshot AND re-
+                            stages the full query batch every tick, blocking.
+  snapshot_overlapped     — KnnSession with full-snapshot ingest but
+                            persistent registered queries and one tick of
+                            submit-ahead.
+  delta_blocking          — KnnSession: device-side scatter of the moved
+                            fraction, persistent queries, blocking collect.
+  delta_overlapped        — delta ingest + submit τ+1 while τ is in flight:
+                            the paper's pipeline (host staging and result
+                            readback double-buffered against device compute).
+  delta_overlapped_stats  — same pipeline, ``collect="stats"``: the on-device
+                            ResultSink aggregates (drift/churn/shard-hit
+                            histogram) are all that reaches the host — O(Q)
+                            scalars instead of the (Q, k) lists.
+  delta_overlapped_none   — ``collect="none"``: nothing beyond the session's
+                            two drift-policy scalars crosses the boundary.
 
 Measurement design: each mode serves the identical pre-generated update
 stream with the device queue to itself (modes must NOT interleave tick-by-
@@ -24,19 +31,26 @@ measured, x=900 nonsense).  Machine-load drift — large on shared CPU hosts
 — is cancelled by running the whole mode sequence twice in mirrored (ABBA)
 order and pooling, so every mode samples early and late load equally.
 Overlapped runs drop the pipeline-fill round (submit-only) and fold the
-drained last result into the final round.  Per tick we also record the
-*structural* serving costs, which are deterministic: bytes staged
-host→device, host time spent staging, and host time blocked collecting
-results.  On a CPU host device compute shares the same cores, so wall-clock
-gains are bounded by the staging+readback fraction; on an accelerator the
-overlapped modes additionally hide the whole staging pipeline behind
-compute (the paper's speedup argument).
+drained last result into the final round.
+
+Per tick we record the *structural* serving costs (deterministic: bytes
+staged host→device, bytes collected device→host) and the decomposed host
+times: staging, device-compute drain (``TickHandle.block_until_ready``), and
+host collection (``TickResult.collect_s`` — the materialization transfer
+ONLY, attributed to the tick that materializes; DESIGN.md §14).  The old
+``host_collect`` column conflated the two — on a CPU host, where device
+compute shares the cores, it read ~the whole sweep.  On a CPU host the drain
+column therefore stays large in every mode and wall-clock gains are bounded
+by the staging+collection fraction; on an accelerator the overlapped modes
+additionally hide the whole staging pipeline behind compute, and the collect
+column is the per-tick PCIe/ICI cost the stats/none modes delete.
 
   PYTHONPATH=src python benchmarks/s6_serving.py [--objects N] [--ticks T]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -45,7 +59,14 @@ import time
 DEFAULT_UPDATE_FRACTION = 0.05
 
 MODES = ("snapshot_blocking", "snapshot_overlapped",
-         "delta_blocking", "delta_overlapped")
+         "delta_blocking", "delta_overlapped",
+         "delta_overlapped_stats", "delta_overlapped_none")
+
+
+def _mode_axes(mode):
+    """mode string -> (ingest, submit, collect)."""
+    parts = mode.split("_")
+    return parts[0], parts[1], (parts[2] if len(parts) > 2 else "full")
 
 
 def _frames(n, ticks, fraction, seed, side=22_500.0, max_speed=200.0):
@@ -77,11 +98,13 @@ class _ModeRunner:
         from repro.core import TickEngine
 
         self.mode = mode
-        self.ingest, self.submit_mode = mode.split("_")
+        self.ingest, self.submit_mode, self.collect_mode = _mode_axes(mode)
+        spec = dataclasses.replace(spec, collect=self.collect_mode)
         self.qpos, self.qid = qpos, qid
         self.pending = None
         self.stage_s = []   # host time staging object/query state
-        self.collect_s = [] # host time blocked materializing results
+        self.wait_s = []    # host time blocked draining device compute
+        self.collect_s = [] # host time materializing results (transfer only)
         self.tick_s = []    # host wall for the whole tick turn
         if mode == "snapshot_blocking":
             with warnings.catch_warnings():
@@ -96,12 +119,23 @@ class _ModeRunner:
             self.first = self.sess.submit().result()
         self.compile_s = self.first.compile_s
 
+    def _settle(self, handle):
+        """Drain compute (timed as wait), then materialize (collect_s)."""
+        tw = time.perf_counter()
+        handle.block_until_ready()
+        self.wait_s.append(time.perf_counter() - tw)
+        res = handle.result()
+        self.collect_s.append(res.collect_s)
+
     def run_tick(self, ids, mpos, snap):
         t0 = time.perf_counter()
         if self.sess is None:  # TickEngine snapshot path: host-blocked throughout
-            self.eng.process_tick(snap, self.qpos, self.qid)
-            t1, t2 = t0, time.perf_counter()
+            res = self.eng.process_tick(snap, self.qpos, self.qid)
             self.stage_s.append(0.0)  # not separable from the blocking call
+            self.collect_s.append(res.collect_s)
+            # the rest of the blocking call is staging+drain, reported as wait
+            self.wait_s.append(
+                max(0.0, time.perf_counter() - t0 - res.collect_s))
         else:
             if self.ingest == "delta":
                 self.sess.update_objects(ids, mpos)
@@ -111,19 +145,17 @@ class _ModeRunner:
             h = self.sess.submit()
             if self.submit_mode == "overlapped":
                 if self.pending is not None:
-                    self.pending.result()
+                    self._settle(self.pending)
                 self.pending = h
             else:
-                h.result()
-            t2 = time.perf_counter()
+                self._settle(h)
             self.stage_s.append(t1 - t0)
-        self.collect_s.append(t2 - t1)
         self.tick_s.append(time.perf_counter() - t0)
 
     def drain(self):
         if self.pending is not None:
             t0 = time.perf_counter()
-            self.pending.result()
+            self._settle(self.pending)
             self.pending = None
             self.tick_s[-1] += time.perf_counter() - t0
 
@@ -137,6 +169,51 @@ def _staged_bytes(mode, n, q_padded, m_padded):
     return objects + queries  # persistent registry: queries stay on device
 
 
+def _collected_bytes(collect, nq, q_padded, k, r_total=1, r_obj=1):
+    """Device->host bytes per steady tick (deterministic, not measured).
+
+    ``full`` ships the (Q, k) lists (i32 idx + f32 dist) plus the per-shard
+    counters; ``stats`` ships the ResultSink aggregates — kth_dist (Qp,) f32,
+    four scalar reductions, the (R_o,) shard-hit histogram, n_live — plus the
+    same counters; ``none`` ships nothing (the two drift-policy scalars the
+    session reads at finalize are mode-independent and excluded throughout).
+    """
+    counters = r_total * 8  # shard_candidates f32 + shard_iterations i32
+    if collect == "none":
+        return 0
+    if collect == "stats":
+        return q_padded * 4 + 4 * 4 + r_obj * 4 + 4 + counters
+    return nq * k * 8 + counters
+
+
+def _check_first_tick_parity(first_results, queries):
+    """Every mode served the identical tick-0 batch.
+
+    Full-collect modes compare the (Q, k) lists bitwise.  ``stats`` modes
+    never ship the lists; their on-device kth_dist column must still equal
+    the full result's k-th distance bitwise (the sink consumes the same
+    device arrays).  ``none`` modes ship nothing — structurally nothing to
+    compare, but the fields must really be absent.
+    """
+    import numpy as np
+
+    base = first_results[MODES[0]]
+    for mode in MODES[1:]:
+        r = first_results[mode]
+        collect = _mode_axes(mode)[2]
+        if collect == "full":
+            np.testing.assert_array_equal(r.nn_idx, base.nn_idx)
+            np.testing.assert_array_equal(r.nn_dist, base.nn_dist)
+        elif collect == "stats":
+            assert r.nn_idx is None and r.nn_dist is None
+            np.testing.assert_array_equal(
+                np.asarray(r.aggregates.kth_dist)[:queries],
+                base.nn_dist[:, -1],
+            )
+        else:
+            assert r.nn_idx is None and r.aggregates is None
+
+
 def run(
     objects: int = 50_000,
     queries: int | None = None,
@@ -146,9 +223,11 @@ def run(
     window: int = 128,
     update_fraction: float = DEFAULT_UPDATE_FRACTION,
     passes: int = 2,
+    precision: str = "fp32",
+    merge: str = "dense_merge",
     out: str | None = "BENCH_serving.json",
 ):
-    """Interleaved sweep of the four serving modes; returns the row list."""
+    """Interleaved sweep of the serving modes; returns the row list."""
     import numpy as np
 
     from repro.api import ServiceSpec
@@ -159,7 +238,8 @@ def run(
         raise ValueError("need ticks >= 3: one warmup round plus at least "
                          "two measured rounds (overlapped modes drop the "
                          "pipeline-fill round)")
-    spec = ServiceSpec(k=k, th_quad=192, l_max=7, window=window, chunk=chunk)
+    spec = ServiceSpec(k=k, th_quad=192, l_max=7, window=window, chunk=chunk,
+                       precision=precision, merge=merge)
     p0, frames = _frames(objects, ticks, update_fraction, seed=0)
     rng = np.random.default_rng(1)
     qpos = rng.uniform(0, 22_500, (queries, 2)).astype(np.float32)
@@ -170,7 +250,8 @@ def run(
     order = []
     for p in range(max(1, passes)):
         order += list(MODES) if p % 2 == 0 else list(reversed(MODES))
-    pooled = {m: {"tick": [], "stage": [], "collect": [], "compile": None}
+    pooled = {m: {"tick": [], "stage": [], "wait": [], "collect": [],
+                  "compile": None}
               for m in MODES}
     first_results = {}
     for mode in order:
@@ -186,15 +267,12 @@ def run(
         s = slice(1, None) if r.submit_mode == "overlapped" else slice(None)
         pooled[mode]["tick"].extend(r.tick_s[s])
         pooled[mode]["stage"].extend(r.stage_s[s])
-        pooled[mode]["collect"].extend(r.collect_s[s])
+        pooled[mode]["wait"].extend(r.wait_s)
+        pooled[mode]["collect"].extend(r.collect_s)
         if pooled[mode]["compile"] is None:
             pooled[mode]["compile"] = float(r.compile_s)
 
-    # tick-0 parity guard: every mode produced the identical result batch
-    base = first_results[MODES[0]]
-    for mode in MODES[1:]:
-        np.testing.assert_array_equal(first_results[mode].nn_idx, base.nn_idx)
-        np.testing.assert_array_equal(first_results[mode].nn_dist, base.nn_dist)
+    _check_first_tick_parity(first_results, queries)
 
     q_padded = pad_capacity(queries, chunk)
     m_padded = pad_capacity(max(1, int(objects * update_fraction)),
@@ -202,30 +280,37 @@ def run(
     base_med = float(np.median(pooled[MODES[0]]["tick"]))
     rows = []
     for mode in MODES:
-        ingest, submit_mode = mode.split("_")
+        ingest, submit_mode, collect = _mode_axes(mode)
         med = float(np.median(pooled[mode]["tick"]))
         rows.append({
             "mode": mode,
             "ingest": ingest,
             "submit": submit_mode,
+            "collect": collect,
+            "precision": precision,
             "steady_tick_s": med,
             "queries_per_s": queries / med,
             "compile_s_first_tick": pooled[mode]["compile"],
             "host_staging_ms_per_tick": float(
                 np.median(pooled[mode]["stage"])) * 1e3,
+            "device_drain_ms_per_tick": float(
+                np.median(pooled[mode]["wait"])) * 1e3,
             "host_collect_ms_per_tick": float(
                 np.median(pooled[mode]["collect"])) * 1e3,
             "staged_bytes_per_tick": _staged_bytes(
                 mode, objects, q_padded, m_padded),
+            "collected_bytes_per_tick": _collected_bytes(
+                collect, queries, q_padded, k),
             "speedup_vs_snapshot_blocking": base_med / med,
         })
         print(f"s6_serving/{mode},{med * 1e6:.1f},"
               f"qps={rows[-1]['queries_per_s']:.0f},"
+              f"collect_ms={rows[-1]['host_collect_ms_per_tick']:.2f},"
               f"x={rows[-1]['speedup_vs_snapshot_blocking']:.3f}", flush=True)
 
     if out:
         rec = {
-            "schema": 3,
+            "schema": 4,
             "unit": "seconds",
             "objects": objects,
             "queries": queries,
@@ -233,6 +318,8 @@ def run(
             "k": k,
             "update_fraction": update_fraction,
             "passes": passes,
+            "precision": precision,
+            "merge": merge,
             "schedule": "mirrored passes (each mode isolated per run)",
             "rows": rows,
             "timestamp": time.time(),
@@ -256,12 +343,18 @@ def main() -> None:
                     default=DEFAULT_UPDATE_FRACTION)
     ap.add_argument("--passes", type=int, default=2,
                     help="mirrored mode-sequence repetitions (drift cancel)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "mixed"],
+                    help="sweep precision (mixed: bf16 prune + fp32 refine; "
+                         "bitwise-identical results, DESIGN.md §14)")
+    ap.add_argument("--merge", default="dense_merge",
+                    help="MERGE backend for the merge-axis plans")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     run(objects=args.objects, queries=args.queries, ticks=args.ticks,
         k=args.k, chunk=args.chunk, window=args.window,
         update_fraction=args.update_fraction, passes=args.passes,
-        out=args.out)
+        precision=args.precision, merge=args.merge, out=args.out)
 
 
 if __name__ == "__main__":

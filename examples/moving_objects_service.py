@@ -17,11 +17,18 @@ merge-reduced lists, DESIGN.md §12) or ``hybrid`` (the 2-D
 skew-adaptive cost-balanced boundaries (count-pyramid seed + measured-work
 EMA, DESIGN.md §13) — same bits, tighter straggler gap under skew.
 
+``--collect stats`` swaps the per-tick ``(Q, k)`` host transfer for the
+on-device ResultSink aggregates (k-th-distance drift, neighbour churn,
+shard-hit histogram — DESIGN.md §14); ``--precision mixed`` runs the sweep
+as a bf16 prune + exact fp32 refine with bitwise-identical results.
+
   PYTHONPATH=src python examples/moving_objects_service.py \
       [--objects N] [--ticks T] \
       [--plan single|sharded|object_sharded|hybrid] [--devices D] \
       [--mesh QxO] [--partitioner equal|cost_balanced] \
-      [--ingest snapshot|delta] [--overlap]
+      [--ingest snapshot|delta] [--overlap] \
+      [--precision fp32|mixed] [--merge dense_merge|fused_multi] \
+      [--collect full|stats|none]
 
 ``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
 initializes, so the mesh plans run on a real D-device mesh without
@@ -71,6 +78,20 @@ def _parse_args():
     ap.add_argument("--overlap", action="store_true",
                     help="submit tick t+1 while tick t's results are in "
                          "flight (double-buffer staging vs compute)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "mixed"],
+                    help="sweep precision: fp32, or the bf16 prune + exact "
+                         "fp32 refine pass (bitwise-identical results, "
+                         "DESIGN.md §14)")
+    ap.add_argument("--merge", default="dense_merge",
+                    help="MERGE backend for the merge-axis plans "
+                         "(object_sharded/hybrid); fused_multi collapses "
+                         "the reduction into one multi-way kernel pass")
+    ap.add_argument("--collect", default="full",
+                    choices=["full", "stats", "none"],
+                    help="result delivery: full (Q,k) lists, on-device "
+                         "ResultSink aggregates only (stats), or nothing "
+                         "(none) — DESIGN.md §14")
     return ap.parse_args()
 
 
@@ -105,7 +126,9 @@ def main():
                            window=min(256, args.chunk), chunk=args.chunk,
                            backend=args.backend, plan=args.plan,
                            mesh_shape=mesh_shape,
-                           partitioner=args.partitioner)
+                           partitioner=args.partitioner,
+                           precision=args.precision, merge=args.merge,
+                           collect=args.collect)
     except ValueError as e:  # eager validation lists the registries
         raise SystemExit(str(e))
 
@@ -115,7 +138,8 @@ def main():
 
     print(f"serving {args.objects} objects x {args.ticks} ticks "
           f"({args.distribution}, k={args.k}, backend={args.backend}, "
-          f"ingest={args.ingest}, overlap={args.overlap})")
+          f"ingest={args.ingest}, overlap={args.overlap}, "
+          f"precision={args.precision}, collect={args.collect})")
     print(f"{session.plan.describe()}  (jax sees {jax.device_count()} "
           f"{jax.default_backend()} device(s))")
 
@@ -123,6 +147,10 @@ def main():
         # under --overlap, res.wall_s spans submit..collection (one round
         # late); tick_s is the true per-round serve time measured here
         extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
+        if res.aggregates is not None:  # --collect stats: the sink's O(Q)
+            a = res.aggregates
+            extra += (f" drift={float(a.kth_drift_mean):.1f}"
+                      f" churn={float(a.churn_mean):.3f}")
         print(f"tick {res.tick:2d}: {tick_s * 1e3:7.1f} ms "
               f"({args.objects / max(tick_s, 1e-9) / 1e3:6.1f}K q/s) "
               f"iters={res.iterations:3d} cand/q={res.candidates / args.objects:6.0f} "

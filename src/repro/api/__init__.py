@@ -19,6 +19,17 @@ deprecation shim over a session.
 """
 from .handles import QueryHandle, TickHandle
 from .session import KnnSession
-from .spec import ServiceSpec
+from .sink import ResultSink, SinkState, StatsSink, TickAggregates
+from .spec import COLLECT_MODES, ServiceSpec
 
-__all__ = ["KnnSession", "ServiceSpec", "QueryHandle", "TickHandle"]
+__all__ = [
+    "KnnSession",
+    "ServiceSpec",
+    "COLLECT_MODES",
+    "QueryHandle",
+    "TickHandle",
+    "ResultSink",
+    "StatsSink",
+    "SinkState",
+    "TickAggregates",
+]

@@ -14,6 +14,20 @@ instead of separate blocking ``np.asarray`` syncs (each sync pays the full
 dispatch-queue drain; batching them collapsed the dominant steady-tick host
 cost measured in BENCH_serving.json).  Pipelines that consume results
 on-device skip the transfer entirely with ``result(materialize=False)``.
+
+What ``result()`` fetches is the spec's ``collect`` mode (DESIGN.md §14):
+``"full"`` ships the ``(Q, k)`` lists as above; ``"stats"`` ships only the
+sink's O(Q)/O(1) :class:`~repro.api.sink.TickAggregates` (``nn_idx``/
+``nn_dist`` come back ``None``); ``"none"`` ships nothing at all — the
+finalize scalars the session already read are the whole host footprint.
+``TickResult.collect_s`` records the transfer time each mode actually paid,
+attributed to the tick whose ``result()`` materialized it (NOT the tick
+whose ``submit()`` happened to overlap it), so BENCH host-collect columns
+stay honest under overlapped submission.  ``result()`` first drains the
+device computation (``block_until_ready``) *outside* the timed window, so
+``collect_s`` is pure host materialization cost — on a CPU host, where
+device compute shares the cores, folding the compute drain into the collect
+column is exactly the conflation the column used to suffer from.
 """
 from __future__ import annotations
 
@@ -62,6 +76,8 @@ class TickHandle:
         submit_s: float,
         compile_s: float,
         rebuilt_pre: bool,
+        collect: str = "full",
+        agg=None,
     ):
         self._session = session
         self.tick = tick
@@ -69,6 +85,8 @@ class TickHandle:
         self._nn_dist = nn_dist
         self._aux = aux
         self._should_rebuild = should_rebuild
+        self._collect = collect
+        self._agg = agg  # device-resident TickAggregates (collect="stats")
         self._nq = nq
         self._qids = qids
         self._owner = owner
@@ -93,7 +111,24 @@ class TickHandle:
         except AttributeError:  # older jax without Array.is_ready
             return False
 
-    def _tick_result(self, nn_idx, nn_dist, shard_cand, shard_it) -> TickResult:
+    def block_until_ready(self) -> "TickHandle":
+        """Block until this tick's device outputs are computed — NO transfer.
+
+        The wait is device-compute drain, not host collection: callers that
+        want the two costs separated (benchmarks, latency-sensitive serving
+        loops) call this first, then ``result()``, whose ``collect_s`` then
+        times only the materialization.  Idempotent; a no-op once the tick
+        has materialized.
+        """
+        if self._result is None:
+            payload = [a for a in (self._nn_idx, self._nn_dist, self._agg)
+                       if a is not None]
+            if payload:
+                jax.block_until_ready(payload)
+        return self
+
+    def _tick_result(self, nn_idx, nn_dist, shard_cand, shard_it,
+                     collect_s: float = 0.0, aggregates=None) -> TickResult:
         return TickResult(
             tick=self.tick,
             nn_idx=nn_idx,
@@ -106,6 +141,8 @@ class TickHandle:
             qids=self._qids,
             shard_candidates=shard_cand,
             shard_iterations=shard_it,
+            collect_s=collect_s,
+            aggregates=aggregates,
         )
 
     def result(self, materialize: bool = True) -> TickResult:
@@ -115,13 +152,24 @@ class TickHandle:
         rebuild bookkeeping is independent of the order in which callers
         collect results.
 
+        What crosses the host boundary is the spec's ``collect`` mode:
+        ``"full"`` materializes the ``(Q, k)`` lists + shard counters in ONE
+        batched ``jax.device_get``; ``"stats"`` fetches only the sink
+        aggregates + shard counters (``nn_idx``/``nn_dist`` = ``None``);
+        ``"none"`` fetches nothing — every host-facing field beyond the
+        finalize bookkeeping is ``None``.  ``TickResult.collect_s`` is the
+        time THIS call spent in the blocking transfer — the tick that
+        materializes pays it, not the tick whose submit it overlapped.
+
         ``materialize=False`` hands back a :class:`TickResult` whose
-        ``nn_idx``/``nn_dist``/``shard_*`` fields are **device arrays**
-        (sliced views of the tick's outputs) — for pipelines that consume
-        results on-device, where a host round-trip per tick would throw away
-        the submit/result overlap.  It does not release the device buffers;
-        a later ``result()`` still materializes (one batched
-        ``jax.device_get``) and releases them.
+        ``nn_idx``/``nn_dist``/``shard_*``/``aggregates`` fields are
+        **device arrays** (sliced views of the tick's outputs) — for
+        pipelines that consume results on-device, where a host round-trip
+        per tick would throw away the submit/result overlap.  The arrays
+        stay valid while later ticks submit and even across a drift rebuild
+        (nothing donates or overwrites them — pinned by tests/test_api.py).
+        It does not release the device buffers; a later ``result()`` still
+        materializes and releases them.
         """
         if self._result is not None:
             return self._result
@@ -132,16 +180,42 @@ class TickHandle:
                 self._result_dev = self._tick_result(
                     self._nn_idx[:nq], self._nn_dist[:nq],
                     self._aux.shard_candidates, self._aux.shard_iterations,
+                    aggregates=self._agg,
                 )
             return self._result_dev
-        # ONE batched host transfer for everything the result carries
-        nn_idx, nn_dist, shard_cand, shard_it = jax.device_get(
-            (self._nn_idx[:nq], self._nn_dist[:nq],
-             self._aux.shard_candidates, self._aux.shard_iterations)
-        )
-        self._result = self._tick_result(nn_idx, nn_dist, shard_cand, shard_it)
+        if self._collect == "none":
+            # nothing to transfer: the finalize scalars the session already
+            # read are this mode's whole host footprint
+            self._result = self._tick_result(None, None, None, None)
+        elif self._collect == "stats":
+            # drain compute OUTSIDE the timed window: collect_s is the pure
+            # materialization cost, not the device queue
+            self.block_until_ready()
+            tc = time.perf_counter()
+            agg, shard_cand, shard_it = jax.device_get(
+                (self._agg, self._aux.shard_candidates,
+                 self._aux.shard_iterations)
+            )
+            self._result = self._tick_result(
+                None, None, shard_cand, shard_it,
+                collect_s=time.perf_counter() - tc, aggregates=agg,
+            )
+        else:
+            # ONE batched host transfer for everything the result carries,
+            # timed after the compute drain (same decomposition as "stats")
+            self.block_until_ready()
+            tc = time.perf_counter()
+            nn_idx, nn_dist, shard_cand, shard_it = jax.device_get(
+                (self._nn_idx[:nq], self._nn_dist[:nq],
+                 self._aux.shard_candidates, self._aux.shard_iterations)
+            )
+            self._result = self._tick_result(
+                nn_idx, nn_dist, shard_cand, shard_it,
+                collect_s=time.perf_counter() - tc,
+            )
         # release device references so XLA can recycle the buffers
         self._nn_idx = self._nn_dist = self._aux = self._should_rebuild = None
+        self._agg = None
         self._result_dev = None
         return self._result
 
@@ -150,8 +224,20 @@ class TickHandle:
 
         Rows are selected by the registry ownership snapshot taken at submit
         time, so the mapping stays correct even if the group is updated or
-        dropped after this tick was submitted.
+        dropped after this tick was submitted.  Under ``collect != "full"``
+        the host never receives the lists, so the rows come back as sliced
+        **device arrays** (via ``result(materialize=False)``).
         """
-        res = self.result()
+        if self._collect == "full":
+            res = self.result()
+        else:
+            res = self.result(materialize=False)
+        if res.nn_idx is None:
+            raise RuntimeError(
+                f"result_for after result() under collect={self._collect!r}: "
+                "the neighbour lists were never transferred and their device "
+                "buffers are released; call result_for (or "
+                "result(materialize=False)) before materializing"
+            )
         rows = np.nonzero(self._owner == handle.hid)[0]
         return res.nn_idx[rows], res.nn_dist[rows], res.qids[rows]

@@ -57,6 +57,7 @@ from repro.core.ticks import (
 )
 
 from .handles import QueryHandle, TickHandle
+from .sink import StatsSink
 from .spec import ServiceSpec
 
 __all__ = ["KnnSession"]
@@ -200,10 +201,10 @@ class KnnSession:
 
     def __init__(self, spec: ServiceSpec):
         self.spec = spec
-        self.executor = resolve_executor(spec.backend)
+        self.executor = resolve_executor(spec.backend, spec.precision)
         self.plan = resolve_plan(
             spec.plan, num_devices=spec.mesh_shape,
-            partitioner=spec.partitioner,
+            partitioner=spec.partitioner, merge=spec.merge,
         )
         self._registry = _QueryRegistry(self.plan.pad_multiple(spec.chunk))
         self._positions = None  # (N, 2) f32, device-resident, by object id
@@ -221,6 +222,15 @@ class KnnSession:
         # object_shards follow the live partition under cost_balanced;
         # cleared on drift rebuild (the Morton ranks it indexes change)
         self._obj_bounds = None
+        # on-device result consumer (DESIGN.md §14): under collect="stats"
+        # submit() feeds each tick's padded (Qp, k) outputs straight into the
+        # jitted sink update — asynchronously, right behind the tick step —
+        # and only the O(Q) aggregates ever reach the host
+        self._sink = (
+            StatsSink(self.plan.object_axis_size)
+            if spec.collect == "stats" else None
+        )
+        self._sink_state = None
 
     # ------------------------------------------------------------ state views
     @property
@@ -460,8 +470,10 @@ class KnnSession:
         if self._registry.rows_changed:
             # the cost EMA is row-aligned with the padded registry batch; a
             # changed row set invalidates the alignment — re-seed from the
-            # count-pyramid estimate (moves via update_queries keep it)
+            # count-pyramid estimate (moves via update_queries keep it);
+            # likewise the sink's cross-tick memory (prev neighbour lists)
             self._qcost = None
+            self._sink_state = None
             self._registry.rows_changed = False
         qpos_dev, qid_dev, nq, qids, owner = self._registry.staged()
         qcost_dev = self._qcost
@@ -491,12 +503,28 @@ class KnnSession:
         self._obj_bounds = (
             aux.object_bounds if self.plan.object_axis_size > 1 else None
         )
+        agg = None
+        if self._sink is not None:
+            # consume the padded results ON DEVICE, behind the tick step in
+            # the same async dispatch stream: tick τ+1's staging overlaps
+            # τ's aggregation exactly as it overlaps τ's sweep
+            if (
+                self._sink_state is None
+                or self._sink_state.prev_idx.shape != nn_idx.shape
+            ):
+                self._sink_state = self._sink.init(
+                    int(nn_idx.shape[0]), spec.k
+                )
+            self._sink_state, agg = self._sink.update(
+                self._sink_state, nn_idx, nn_dist, self._index,
+                self._obj_bounds, jnp.int32(nq),
+            )
         submit_s = time.perf_counter() - t0
         # key must mirror everything the jit cache keys on: shapes AND the
         # statics (th_quad/l_max ride in the index pytree's meta fields)
         key = (int(qpos_dev.shape[0]), self.num_objects, spec.k, spec.window,
                spec.chunk, spec.l_max, spec.th_quad, spec.max_iters,
-               self.executor, self.plan)
+               self.executor, self.plan, spec.collect)
         compile_s = submit_s if key not in _COMPILED_KEYS else 0.0
         _COMPILED_KEYS.add(key)
         h = TickHandle(
@@ -513,6 +541,8 @@ class KnnSession:
             submit_s=submit_s,
             compile_s=compile_s,
             rebuilt_pre=rebuilt_pre,
+            collect=spec.collect,
+            agg=agg,
         )
         self._tick += 1
         self._pending.append(h)

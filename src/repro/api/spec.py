@@ -15,9 +15,15 @@ import dataclasses
 
 from repro.core.ticks import EngineConfig, validate_engine_params
 
-__all__ = ["ServiceSpec"]
+__all__ = ["ServiceSpec", "COLLECT_MODES"]
 
 SIDE_DEFAULT = 22_500.0  # paper Table 1: squared region of side 22500 u
+
+# what crosses the host boundary per tick (DESIGN.md §14):
+#   "full"  — the (Q, k) neighbour lists + shard counters (the pre-§14 path);
+#   "stats" — O(Q)/O(1) on-device aggregates only (TickAggregates);
+#   "none"  — nothing beyond the two drift scalars the session already reads.
+COLLECT_MODES = ("full", "stats", "none")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,17 +53,33 @@ class ServiceSpec:
     # repro.core.balance) — cost_balanced re-cuts shard boundaries every tick
     # from the count-pyramid seed + the session's measured-work EMA
     partitioner: str = "equal"
+    # sweep numeric mode ("fp32" | "mixed"; repro.core.executor.PRECISIONS)
+    # — mixed runs a bf16 widened-radius prefilter + exact fp32 refine,
+    # bitwise-identical results (DESIGN.md §14)
+    precision: str = "fp32"
+    # MERGE backend for the object-axis reduce ("dense_merge" | "fused_multi";
+    # repro.kernels.merge_backend_names())
+    merge: str = "dense_merge"
     max_iters: int = 100_000
     origin: tuple[float, float] = (0.0, 0.0)
     side: float = SIDE_DEFAULT
     delta_pad: int = 1024
+    # per-tick result consumption mode (COLLECT_MODES; DESIGN.md §14):
+    # "full" ships the (Q, k) lists to the host, "stats" ships only the
+    # on-device aggregates, "none" ships nothing beyond the drift scalars
+    collect: str = "full"
 
     def __post_init__(self):
         validate_engine_params(
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
-            partitioner=self.partitioner,
+            partitioner=self.partitioner, precision=self.precision,
+            merge=self.merge,
         )
+        if self.collect not in COLLECT_MODES:
+            raise ValueError(
+                f"unknown collect mode {self.collect!r}; one of {COLLECT_MODES}"
+            )
         if self.side <= 0:
             raise ValueError(f"side must be > 0, got {self.side}")
         if len(self.origin) != 2:
@@ -72,7 +94,8 @@ class ServiceSpec:
             window=self.window, chunk=self.chunk,
             rebuild_factor=self.rebuild_factor, region_pad=self.region_pad,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
-            partitioner=self.partitioner, max_iters=self.max_iters,
+            partitioner=self.partitioner, precision=self.precision,
+            merge=self.merge, max_iters=self.max_iters,
         )
 
     @classmethod
@@ -90,7 +113,7 @@ class ServiceSpec:
             chunk=cfg.chunk, rebuild_factor=cfg.rebuild_factor,
             region_pad=cfg.region_pad, backend=cfg.backend, plan=cfg.plan,
             mesh_shape=cfg.mesh_shape, partitioner=cfg.partitioner,
-            max_iters=cfg.max_iters,
+            precision=cfg.precision, merge=cfg.merge, max_iters=cfg.max_iters,
             origin=(float(origin[0]), float(origin[1])), side=float(side),
             delta_pad=delta_pad,
         )

@@ -147,10 +147,11 @@ class Partitioner:
     @property
     def is_equal(self) -> bool:
         """True if boundaries are always the equal-count split (a pure
-        function of the unit count).  The ``sharded`` plan uses its static
-        equal-split fast path (split ``in_specs``, no capacity masking)
-        when set; the object-axis plans share one boundary-driven body for
-        both partitioners (see the module docstring)."""
+        function of the unit count).  Every plan now runs ONE
+        boundary-driven body for both partitioners (the ``sharded`` plan's
+        split-``in_specs`` fast path was retired with DESIGN.md §14); the
+        flag survives as a cheap query for tests and benchmarks that want
+        to know whether boundaries can move between ticks."""
         return False
 
     def query_capacity(self, n_chunks: int, num_shards: int) -> int:

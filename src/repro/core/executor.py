@@ -29,11 +29,13 @@ import dataclasses
 from repro.kernels import get_scan_backend, scan_backend_names
 
 __all__ = [
+    "PRECISIONS",
     "QueryExecutor",
     "resolve_executor",
     "available_backends",
     "available_plans",
     "available_partitioners",
+    "available_precisions",
     "resolve_plan",
 ]
 
@@ -58,6 +60,12 @@ def available_partitioners() -> tuple[str, ...]:
     return partitioner_names()
 
 
+def available_precisions() -> tuple[str, ...]:
+    """Names accepted by ``EngineConfig.precision`` — the sweep's numeric
+    mode (DESIGN.md §14), configured at the same boundary as the backend."""
+    return PRECISIONS
+
+
 def __getattr__(name):
     # ``resolve_plan`` is a documented ALIAS of the canonical entry point
     # ``repro.core.plan.resolve_plan`` — resolved lazily (plan.py imports the
@@ -71,14 +79,29 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
+PRECISIONS = ("fp32", "mixed")
+
+
 @dataclasses.dataclass(frozen=True)
 class QueryExecutor:
-    """A named SCAN-merge strategy (+ room for future static tuning knobs)."""
+    """A named SCAN-merge strategy (+ the sweep's numeric precision mode).
+
+    ``precision`` selects the sweep arithmetic (DESIGN.md §14): ``fp32`` is
+    the exact path; ``mixed`` prepends a bf16 distance pass with a
+    conservatively widened k-th-distance radius and re-ranks only the
+    survivors in exact fp32 — bitwise-identical results for every backend
+    (fuzzed across the plan x partitioner matrix by the property harness).
+    """
 
     backend: str = "dense_topk"
+    precision: str = "fp32"
 
     def __post_init__(self):
         get_scan_backend(self.backend)  # fail fast on unknown names
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; one of {PRECISIONS}"
+            )
 
     def scan_merge(self, qpos, cpos, cids, valid, best_d, best_i, *, k: int):
         """Merge one candidate window into the ascending result lists.
@@ -88,14 +111,24 @@ class QueryExecutor:
         distance ties.
         """
         return get_scan_backend(self.backend)(
-            qpos, cpos, cids, valid, best_d, best_i, k
+            qpos, cpos, cids, valid, best_d, best_i, k,
+            precision=self.precision,
         )
 
 
-def resolve_executor(backend) -> QueryExecutor:
-    """Name | QueryExecutor | None -> QueryExecutor (default: dense_topk)."""
-    if backend is None:
-        return QueryExecutor()
+def resolve_executor(backend, precision=None) -> QueryExecutor:
+    """Name | QueryExecutor | None [+ precision] -> QueryExecutor.
+
+    Defaults: ``dense_topk`` / ``fp32``.  An explicit ``precision`` overrides
+    the one a passed-in ``QueryExecutor`` instance carries.
+    """
     if isinstance(backend, QueryExecutor):
+        if precision is not None and precision != backend.precision:
+            return dataclasses.replace(backend, precision=str(precision))
         return backend
-    return QueryExecutor(backend=str(backend))
+    kw = {}
+    if backend is not None:
+        kw["backend"] = str(backend)
+    if precision is not None:
+        kw["precision"] = str(precision)
+    return QueryExecutor(**kw)

@@ -98,7 +98,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import SPATIAL_RULES, shard_map_compat, use_rules
-from repro.kernels.ops import tree_merge_lists
+from repro.kernels.ops import get_merge_backend, tree_merge_lists
 from repro.launch.mesh import (
     default_hybrid_shape,
     make_object_mesh,
@@ -636,12 +636,15 @@ class SinglePlan(ExecutionPlan):
 class ShardedPlan(ExecutionPlan):
     """Replicated index, query-sharded sweep over a 1-D ``("query",)`` mesh.
 
-    Under the ``equal`` partitioner this is the pre-seam static split (the
-    batch enters ``shard_map`` split along the query axis, every device owns
-    exactly ``n_chunks / R`` chunks).  Under ``cost_balanced`` the sorted
-    batch enters REPLICATED, boundaries ride in as data, and each device
-    ``dynamic_slice``s its owned chunk range out of one static capacity —
-    chunks past its boundary interval are skipped by the masked sweep.
+    ONE boundary-driven body for both partitioners (the last split-``in_specs``
+    path was retired with DESIGN.md §14): the sorted batch enters ``shard_map``
+    REPLICATED, boundaries ride in as data, and each device ``dynamic_slice``s
+    its owned chunk range out of one static capacity — chunks past its
+    boundary interval are skipped by the masked sweep.  Under ``equal`` the
+    boundaries are the static equal-count cuts (every device owns exactly
+    ``n_chunks / R`` chunks, so no chunk is ever masked); under
+    ``cost_balanced`` they re-balance every tick.  Replicating the query
+    batch is bounded by the index this plan already replicates.
     """
 
     num_devices: int
@@ -673,69 +676,48 @@ class ShardedPlan(ExecutionPlan):
         obj_bounds = jnp.asarray([0, index.n_objects], jnp.int32)
         alpha = getattr(self.partitioner, "ema_alpha", _EMA_ALPHA_DEFAULT)
 
-        if self.partitioner.is_equal:
+        nq = qpos.shape[0]
+        n_chunks = nq // chunk
+        cap_c = self.partitioner.query_capacity(n_chunks, self.num_devices)
+        est_s = _query_cost_estimate(index, qpos_s, window)
+        prev_s = qcost[order]
+        cost_s = jnp.where(prev_s > 0, prev_s, est_s)
+        bounds = self.partitioner.query_boundaries(
+            cost_s.reshape(n_chunks, chunk).sum(axis=1), self.num_devices
+        )
+        qs_pad, qi_pad = _pad_tail_rows(qpos_s, qid_s, cap_c * chunk)
 
-            def device_local(index, qp, qi):
-                idx_l, d2_l, st, cq_l = _chunked_sweep(
-                    index, qp, qi, k=k, window=window, chunk=chunk,
-                    max_nav=max_nav, max_iters=max_iters, executor=executor,
-                )
-                # local (1,)-shaped stats leave TILED along the mesh — the
-                # gathered (R,) rows ARE the per-shard counters; the global
-                # drift statistic is their sum, taken outside the mesh
-                return idx_l, d2_l, _stats1(st), cq_l
-
-            sharded = shard_map_compat(
-                device_local,
-                mesh=mesh,
-                in_specs=(repl_spec, qpos_spec, qvec_spec),
-                out_specs=(qpos_spec, qpos_spec,
-                           KnnStats(qvec_spec, qvec_spec, qvec_spec),
-                           qvec_spec),
-                axis_names={"query"},
-                check_vma=False,
+        def device_local(index, qp, qi, b):
+            r = jax.lax.axis_index("query")
+            start = b[r] * chunk
+            ownq = b[r + 1] - b[r]
+            qp_l = jax.lax.dynamic_slice_in_dim(qp, start, cap_c * chunk, 0)
+            qi_l = jax.lax.dynamic_slice_in_dim(qi, start, cap_c * chunk, 0)
+            idx_l, d2_l, st, cq_l = _chunked_sweep_masked(
+                index, qp_l, qi_l, ownq, k=k, window=window, chunk=chunk,
+                max_nav=max_nav, max_iters=max_iters, executor=executor,
             )
-            idx_s, d2_s, st_t, cq_s = sharded(index, qpos_s, qid_s)
-        else:
-            nq = qpos.shape[0]
-            n_chunks = nq // chunk
-            cap_c = self.partitioner.query_capacity(n_chunks, self.num_devices)
-            est_s = _query_cost_estimate(index, qpos_s, window)
-            prev_s = qcost[order]
-            cost_s = jnp.where(prev_s > 0, prev_s, est_s)
-            bounds = self.partitioner.query_boundaries(
-                cost_s.reshape(n_chunks, chunk).sum(axis=1), self.num_devices
-            )
-            qs_pad, qi_pad = _pad_tail_rows(qpos_s, qid_s, cap_c * chunk)
+            # local (1,)-shaped stats leave TILED along the mesh — the
+            # gathered (R,) rows ARE the per-shard counters; the global
+            # drift statistic is their sum, taken outside the mesh
+            return idx_l, d2_l, _stats1(st), cq_l
 
-            def device_local(index, qp, qi, b):
-                r = jax.lax.axis_index("query")
-                start = b[r] * chunk
-                ownq = b[r + 1] - b[r]
-                qp_l = jax.lax.dynamic_slice_in_dim(qp, start, cap_c * chunk, 0)
-                qi_l = jax.lax.dynamic_slice_in_dim(qi, start, cap_c * chunk, 0)
-                idx_l, d2_l, st, cq_l = _chunked_sweep_masked(
-                    index, qp_l, qi_l, ownq, k=k, window=window, chunk=chunk,
-                    max_nav=max_nav, max_iters=max_iters, executor=executor,
-                )
-                return idx_l, d2_l, _stats1(st), cq_l
-
-            # batch + boundaries enter REPLICATED (devices self-slice by
-            # boundary), outputs leave tiled — the jax-0.4.x discipline of
-            # _object_merge_local applied to the query axis
-            sharded = shard_map_compat(
-                device_local,
-                mesh=mesh,
-                in_specs=(repl_spec, repl_spec, repl_spec, repl_spec),
-                out_specs=(qpos_spec, qpos_spec,
-                           KnnStats(qvec_spec, qvec_spec, qvec_spec),
-                           qvec_spec),
-                axis_names={"query"},
-                check_vma=False,
-            )
-            idx_t, d2_t, st_t, cq_t = sharded(index, qs_pad, qi_pad, bounds)
-            pos = _owner_positions(bounds, nq, chunk, cap_c * chunk)
-            idx_s, d2_s, cq_s = idx_t[pos], d2_t[pos], cq_t[pos]
+        # batch + boundaries enter REPLICATED (devices self-slice by
+        # boundary), outputs leave tiled — the jax-0.4.x discipline of
+        # _object_merge_local applied to the query axis
+        sharded = shard_map_compat(
+            device_local,
+            mesh=mesh,
+            in_specs=(repl_spec, repl_spec, repl_spec, repl_spec),
+            out_specs=(qpos_spec, qpos_spec,
+                       KnnStats(qvec_spec, qvec_spec, qvec_spec),
+                       qvec_spec),
+            axis_names={"query"},
+            check_vma=False,
+        )
+        idx_t, d2_t, st_t, cq_t = sharded(index, qs_pad, qi_pad, bounds)
+        pos = _owner_positions(bounds, nq, chunk, cap_c * chunk)
+        idx_s, d2_s, cq_s = idx_t[pos], d2_t[pos], cq_t[pos]
 
         qcost_next = _ema_next(qcost[order], cq_s, alpha)[inv]
         aux = PlanAux(
@@ -777,6 +759,7 @@ class ObjectShardedPlan(ExecutionPlan):
     def __post_init__(self):
         if self.num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {self.num_devices}")
+        get_merge_backend(self.merge)  # fail fast on unknown names
 
     @property
     def object_axis_size(self) -> int:
@@ -862,7 +845,7 @@ class HybridPlan(ExecutionPlan):
     query axis.  The query padding granularity is ``query_devices * chunk``
     — object slicing needs no query-side padding (DESIGN.md §12).  Both
     axes take their boundaries from the partitioner (equal-count under
-    ``equal``, cost-balanced under ``cost_balanced``); unlike
+    ``equal``, cost-balanced under ``cost_balanced``); like
     :class:`ShardedPlan` there is ONE boundary-driven body for both
     partitioners — the query batch enters replicated either way, which is
     bounded by the object arrays this plan already replicates, and equal
@@ -881,6 +864,7 @@ class HybridPlan(ExecutionPlan):
                 "mesh_shape axes must be >= 1, got "
                 f"({self.query_devices}, {self.object_devices})"
             )
+        get_merge_backend(self.merge)  # fail fast on unknown names
 
     @property
     def object_axis_size(self) -> int:
@@ -971,7 +955,7 @@ class HybridPlan(ExecutionPlan):
 # plan registry — serving/benchmarks/examples select a plan by name
 # --------------------------------------------------------------------------
 
-# name -> factory(num_devices | None, Partitioner) -> ExecutionPlan
+# name -> factory(num_devices | None, Partitioner, merge | None) -> ExecutionPlan
 _PLANS: dict = {}
 
 
@@ -991,9 +975,9 @@ def plan_names() -> tuple[str, ...]:
 
 
 @register_plan("single")
-def _make_single(num_devices=None, partitioner=None) -> SinglePlan:
-    # the single plan has no split axes; the partitioner knob is accepted
-    # (specs default it globally) and ignored
+def _make_single(num_devices=None, partitioner=None, merge=None) -> SinglePlan:
+    # the single plan has no split axes; the partitioner/merge knobs are
+    # accepted (specs default them globally) and ignored
     return SinglePlan()
 
 
@@ -1009,7 +993,9 @@ def _as_1d(name: str, num_devices) -> int:
 
 
 @register_plan("sharded")
-def _make_sharded(num_devices=None, partitioner=None) -> ShardedPlan:
+def _make_sharded(num_devices=None, partitioner=None, merge=None) -> ShardedPlan:
+    # no object axis, hence no merge reduction; the knob is accepted and
+    # ignored like the single plan's partitioner
     return ShardedPlan(
         num_devices=_as_1d("sharded", num_devices),
         partitioner=resolve_partitioner(partitioner),
@@ -1017,15 +1003,18 @@ def _make_sharded(num_devices=None, partitioner=None) -> ShardedPlan:
 
 
 @register_plan("object_sharded")
-def _make_object_sharded(num_devices=None, partitioner=None) -> ObjectShardedPlan:
+def _make_object_sharded(
+    num_devices=None, partitioner=None, merge=None
+) -> ObjectShardedPlan:
     return ObjectShardedPlan(
         num_devices=_as_1d("object_sharded", num_devices),
         partitioner=resolve_partitioner(partitioner),
+        **({} if merge is None else {"merge": str(merge)}),
     )
 
 
 @register_plan("hybrid")
-def _make_hybrid(num_devices=None, partitioner=None) -> HybridPlan:
+def _make_hybrid(num_devices=None, partitioner=None, merge=None) -> HybridPlan:
     if isinstance(num_devices, (tuple, list)):
         if len(num_devices) != 2:
             raise ValueError(
@@ -1037,19 +1026,23 @@ def _make_hybrid(num_devices=None, partitioner=None) -> HybridPlan:
     return HybridPlan(
         query_devices=q, object_devices=o,
         partitioner=resolve_partitioner(partitioner),
+        **({} if merge is None else {"merge": str(merge)}),
     )
 
 
-def resolve_plan(plan, *, num_devices=None, partitioner=None) -> ExecutionPlan:
+def resolve_plan(plan, *, num_devices=None, partitioner=None,
+                 merge=None) -> ExecutionPlan:
     """Name | ExecutionPlan | None -> ExecutionPlan (default: single).
 
     ``num_devices`` parameterizes named plans (``EngineConfig.mesh_shape``):
     an int for the 1-D plans (``sharded`` / ``object_sharded``, default every
     visible device) or a ``(query, object)`` pair for ``hybrid`` (default the
     most balanced factorization of the device count).  ``partitioner`` is a
-    :mod:`repro.core.balance` name or instance (default ``equal``); it is
-    ignored when ``plan`` is already an ExecutionPlan instance (the instance
-    carries its own).
+    :mod:`repro.core.balance` name or instance (default ``equal``); ``merge``
+    a MERGE backend name for the object-axis reduction (default
+    ``dense_merge``; ``fused_multi`` collapses the tree into one Pallas
+    program — DESIGN.md §14).  Both are ignored when ``plan`` is already an
+    ExecutionPlan instance (the instance carries its own).
     """
     if plan is None:
         return SinglePlan()
@@ -1061,7 +1054,7 @@ def resolve_plan(plan, *, num_devices=None, partitioner=None) -> ExecutionPlan:
         raise ValueError(
             f"unknown execution plan {plan!r}; registered: {plan_names()}"
         ) from None
-    return factory(num_devices, partitioner)
+    return factory(num_devices, partitioner, merge)
 
 
 # --------------------------------------------------------------------------
@@ -1152,18 +1145,22 @@ def knn_query_batch_chunked(
     max_nav: int | None = None,
     max_iters: int = 100_000,
     backend=None,
+    precision=None,
     plan=None,
     num_devices: int | None = None,
     partitioner=None,
+    merge=None,
     with_aux: bool = False,
 ):
     """Host-friendly wrapper over :func:`run_plan_device` (numpy in/out).
 
-    ``plan``/``num_devices``/``partitioner`` select the execution plan by
-    name (default ``single`` / ``equal``); padding and stripping are handled
-    here, once, host-side.  ``with_aux=True`` appends the host-materialized
-    :class:`PlanAux` (per-shard counters, cost EMA, object boundaries) to
-    the return tuple — the benchmarks' straggler-gap probe.
+    ``plan``/``num_devices``/``partitioner``/``merge`` select the execution
+    plan by name (default ``single`` / ``equal`` / ``dense_merge``);
+    ``backend``/``precision`` the executor (default ``dense_topk`` /
+    ``fp32``).  Padding and stripping are handled here, once, host-side.
+    ``with_aux=True`` appends the host-materialized :class:`PlanAux`
+    (per-shard counters, cost EMA, object boundaries) to the return tuple —
+    the benchmarks' straggler-gap probe.
     """
     import numpy as np
 
@@ -1172,7 +1169,8 @@ def knn_query_batch_chunked(
     nq = qpos.shape[0]
     if qid is None:
         qid = np.full((nq,), -2, np.int32)
-    plan = resolve_plan(plan, num_devices=num_devices, partitioner=partitioner)
+    plan = resolve_plan(plan, num_devices=num_devices, partitioner=partitioner,
+                        merge=merge)
     qpos_p, qid_p = pad_queries(
         np.asarray(qpos), np.asarray(qid), plan.pad_multiple(chunk)
     )
@@ -1185,7 +1183,7 @@ def knn_query_batch_chunked(
         chunk=chunk,
         max_nav=_resolve_max_nav(index, max_nav),
         max_iters=max_iters,
-        executor=resolve_executor(backend),
+        executor=resolve_executor(backend, precision),
         plan=plan,
     )
     stats = KnnStats(

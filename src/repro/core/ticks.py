@@ -79,17 +79,19 @@ __all__ = [
 
 
 def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None,
-                           partitioner=None):
+                           partitioner=None, precision=None, merge=None):
     """Eager validation shared by ``EngineConfig`` and ``repro.api.ServiceSpec``.
 
     Raises ``ValueError`` with the full registry listing for unknown
-    ``backend``/``plan``/``partitioner`` names (instead of the deep registry
-    ``KeyError`` that used to surface on first use), and rejects geometry
-    that the chunked sweep cannot serve (``chunk`` not a multiple of
-    ``window``, ``k > chunk``).  Instances (``QueryExecutor`` /
-    ``ExecutionPlan`` / ``Partitioner``) pass through unchecked — they
-    validated themselves on construction.
+    ``backend``/``plan``/``partitioner``/``precision``/``merge`` names
+    (instead of the deep registry ``KeyError`` that used to surface on first
+    use), and rejects geometry that the chunked sweep cannot serve
+    (``chunk`` not a multiple of ``window``, ``k > chunk``).  Instances
+    (``QueryExecutor`` / ``ExecutionPlan`` / ``Partitioner``) pass through
+    unchecked — they validated themselves on construction.
     """
+    from .executor import available_precisions
+
     if isinstance(backend, str) and backend not in available_backends():
         raise ValueError(
             f"unknown backend {backend!r}; registered SCAN backends: "
@@ -105,6 +107,18 @@ def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None,
             f"unknown partitioner {partitioner!r}; registered partitioners: "
             f"{partitioner_names()}"
         )
+    if precision is not None and precision not in available_precisions():
+        raise ValueError(
+            f"unknown precision {precision!r}; one of {available_precisions()}"
+        )
+    if merge is not None:
+        from repro.kernels import merge_backend_names
+
+        if isinstance(merge, str) and merge not in merge_backend_names():
+            raise ValueError(
+                f"unknown merge backend {merge!r}; registered MERGE "
+                f"backends: {merge_backend_names()}"
+            )
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     if window < 1:
@@ -153,13 +167,22 @@ class EngineConfig:
     # "equal" = the static equal-count splits, "cost_balanced" = skew-adaptive
     # boundaries from the count-pyramid seed + measured-work EMA)
     partitioner: str = "equal"
+    # sweep numeric mode (executor.available_precisions(); DESIGN.md §14):
+    # "fp32" = exact; "mixed" = bf16 widened-radius prefilter + fp32 refine,
+    # bitwise-identical results
+    precision: str = "fp32"
+    # MERGE backend for the object-axis reduce (kernels.merge_backend_names();
+    # "dense_merge" = binary tree of pairwise kernels, "fused_multi" = one
+    # multi-way kernel per query row — no HBM round-trip between rounds)
+    merge: str = "dense_merge"
     max_iters: int = 100_000
 
     def __post_init__(self):
         validate_engine_params(
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
-            partitioner=self.partitioner,
+            partitioner=self.partitioner, precision=self.precision,
+            merge=self.merge,
         )
 
 
@@ -179,6 +202,13 @@ class TickResult:
     # max/mean of it is the straggler gap (repro.core.balance.straggler_gap)
     shard_candidates: np.ndarray | None = None  # (R_total,) f32
     shard_iterations: np.ndarray | None = None  # (R_total,) i32
+    # host-transfer time actually spent materializing THIS tick's results,
+    # attributed to the tick that materializes (not the tick that submits);
+    # a subset of wall_s (satellite: overlapped-mode accounting, DESIGN.md §14)
+    collect_s: float = 0.0
+    # on-device aggregates (repro.api.sink.TickAggregates) under
+    # collect="stats"; None under "full"/"none"
+    aggregates: object | None = None
 
 
 @partial(

@@ -12,6 +12,7 @@ from .ops import (
     get_scan_backend,
     merge_backend_names,
     merge_topk_lists_op,
+    multi_merge_lists_op,
     pairwise_dist_op,
     register_merge_backend,
     register_scan_backend,
@@ -25,14 +26,18 @@ from .ref import (
     pairwise_dist_ref,
     topk_select_ref,
 )
+from .refine import MIXED_WIDEN, mixed_prune_keep
 from .runtime import default_interpret
 
 __all__ = [
     "bucket_kselect_op",
     "fused_scan_merge_op",
     "merge_topk_lists_op",
+    "multi_merge_lists_op",
     "pairwise_dist_op",
     "topk_select_op",
+    "MIXED_WIDEN",
+    "mixed_prune_keep",
     "bucket_kselect_ref",
     "merge_topk_lists_ref",
     "pairwise_dist_ref",

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .refine import bucket_refine_step, masked_argmin_rounds
+from .refine import bucket_refine_step, masked_argmin_rounds, mixed_prune_keep
 from .runtime import default_interpret
 
 __all__ = ["fused_scan_merge", "Q_TILE"]
@@ -34,7 +34,7 @@ __all__ = ["fused_scan_merge", "Q_TILE"]
 Q_TILE = 8
 
 
-def _make_kernel(k: int, w: int, num_bins: int, iters: int):
+def _make_kernel(k: int, w: int, num_bins: int, iters: int, precision: str):
     def kernel(
         qx_ref, qy_ref, cx_ref, cy_ref, cids_ref, valid_ref,
         best_d_ref, best_i_ref, out_d_ref, out_i_ref,
@@ -49,6 +49,15 @@ def _make_kernel(k: int, w: int, num_bins: int, iters: int):
 
         dx = cx - qx[:, None]
         dy = cy - qy[:, None]
+        if precision == "mixed":
+            # bf16 prefilter against the widened exact k-th boundary
+            # (DESIGN.md §14): candidates strictly beyond the current k-th
+            # distance drop out of the fp32 distance tile AND the bucket
+            # refinement population below — entirely in VMEM, so the win is
+            # VPU work, not an extra HBM pass.  Bitwise-neutral: the argmin
+            # rounds still pick the exact k smallest of the survivors, and
+            # no true top-k member (ties included) can be pruned.
+            valid = valid & mixed_prune_keep(dx, dy, best_d_ref[:, k - 1])
         d2 = jnp.where(valid, dx * dx + dy * dy, big)  # (T, W) — stays in VMEM
 
         all_d = jnp.concatenate([best_d_ref[:, :], d2], axis=1)  # (T, k+W)
@@ -89,7 +98,7 @@ def _make_kernel(k: int, w: int, num_bins: int, iters: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "num_bins", "iters", "interpret")
+    jax.jit, static_argnames=("k", "num_bins", "iters", "precision", "interpret")
 )
 def fused_scan_merge(
     qx, qy, cx, cy, cids, valid, best_d, best_i,
@@ -97,6 +106,7 @@ def fused_scan_merge(
     k: int,
     num_bins: int = 32,
     iters: int = 4,
+    precision: str = "fp32",
     interpret: bool | None = None,
 ):
     """(Q,) queries x (Q, W) per-query windows x (Q, k) lists -> merged lists.
@@ -104,6 +114,8 @@ def fused_scan_merge(
     Semantics match the unfused dense path exactly (up to k-th-distance ties):
     ``merge(best, window)`` = k smallest of the union, ascending, (-1, inf)
     padded.  Q must be a multiple of Q_TILE (wrappers pad).
+    ``precision="mixed"`` adds the in-VMEM bf16 widened-radius prefilter —
+    bitwise-identical output (tests/test_properties.py fuzzes the parity).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -112,7 +124,7 @@ def fused_scan_merge(
     grid = (q // Q_TILE,)
     row = lambda i: (i, 0)
     out_d, out_i = pl.pallas_call(
-        _make_kernel(k, w, num_bins, iters),
+        _make_kernel(k, w, num_bins, iters, precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((Q_TILE,), lambda i: (i,)),

@@ -11,17 +11,22 @@ Two things live here:
 2. **The scan-backend registry** (DESIGN.md §6): the pipeline's SCAN step —
    "merge one window of gathered candidates into each query's ascending result
    list" — is a pluggable strategy selected by name.  All backends implement
-   ``merge(qpos, cpos, cids, valid, best_d, best_i, k)`` with identical
-   semantics (k smallest of the union, ascending, (-1, inf) padded; distance
-   ties resolved to the lowest id — the canonical lexicographic ``(d2, id)``
-   selection order of DESIGN.md §12) so they are interchangeable under the
-   executor *bit-for-bit*:
+   ``merge(qpos, cpos, cids, valid, best_d, best_i, k, precision="fp32")``
+   with identical semantics (k smallest of the union, ascending, (-1, inf)
+   padded; distance ties resolved to the lowest id — the canonical
+   lexicographic ``(d2, id)`` selection order of DESIGN.md §12) so they are
+   interchangeable under the executor *bit-for-bit*:
 
    - ``dense_topk``   XLA ``lax.top_k`` over the concatenated row (seed path);
    - ``fused_bucket`` one Pallas kernel: distance tile + Alabi bucket radius +
                       masked argmin rounds, all VMEM-resident (DESIGN.md §7);
    - ``brute``        full per-row sort (Garcia-baseline flavour: selection
                       cost independent of k, the S2 yardstick).
+
+   ``precision="mixed"`` (DESIGN.md §14) prepends the bf16 widened-radius
+   prefilter (``refine.mixed_prune_keep``) to any backend's exact fp32
+   selection — results stay bitwise-identical to fp32 (the property harness
+   fuzzes the parity across the whole backend x plan x partitioner matrix).
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ from . import merge_topk as _mt
 from . import pairwise_dist as _pd
 from . import topk_select as _tk
 from .ref import merge_topk_lists_ref
+from .refine import mixed_prune_keep
 
 __all__ = [
     "pairwise_dist_op",
@@ -44,6 +50,7 @@ __all__ = [
     "topk_select_op",
     "fused_scan_merge_op",
     "merge_topk_lists_op",
+    "multi_merge_lists_op",
     "tree_merge_lists",
     "register_scan_backend",
     "get_scan_backend",
@@ -120,6 +127,7 @@ def topk_select_op(d2, ids, *, k: int, interpret: bool | None = None):
 
 def fused_scan_merge_op(
     qpos, cpos, cids, valid, best_d, best_i, *, k: int,
+    precision: str = "fp32",
     interpret: bool | None = None,
 ):
     """Pad-and-dispatch wrapper for :func:`repro.kernels.fused_scan.fused_scan_merge`.
@@ -138,7 +146,8 @@ def fused_scan_merge_op(
     bd = _pad_to(best_d.astype(jnp.float32), qp, jnp.inf)
     bi = _pad_to(best_i.astype(jnp.int32), qp, -1)
     out_d, out_i = _fs.fused_scan_merge(
-        qx, qy, cx, cy, ci, v, bd, bi, k=k, interpret=interpret
+        qx, qy, cx, cy, ci, v, bd, bi, k=k, precision=precision,
+        interpret=interpret,
     )
     return out_d[:q], out_i[:q]
 
@@ -170,7 +179,8 @@ def merge_topk_lists_op(
 # SCAN backend registry
 # --------------------------------------------------------------------------
 
-# merge(qpos, cpos, cids, valid, best_d, best_i, k) -> (best_d, best_i)
+# merge(qpos, cpos, cids, valid, best_d, best_i, k, precision="fp32")
+#   -> (best_d, best_i)
 ScanMergeFn = Callable[..., tuple]
 
 _SCAN_BACKENDS: dict[str, ScanMergeFn] = {}
@@ -199,13 +209,8 @@ def scan_backend_names() -> tuple[str, ...]:
     return tuple(sorted(_SCAN_BACKENDS))
 
 
-def _masked_d2(qpos, cpos, valid):
-    dx = cpos[:, :, 0] - qpos[:, None, 0]
-    dy = cpos[:, :, 1] - qpos[:, None, 1]
-    return jnp.where(valid, dx * dx + dy * dy, jnp.inf)
-
-
-def _lex_sort_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
+def _lex_sort_merge(qpos, cpos, cids, valid, best_d, best_i, k: int,
+                    precision: str = "fp32"):
     """Concatenated row -> XLA two-key ``lax.sort``, lexicographic (d2, id).
 
     One body for both the ``dense_topk`` and ``brute`` names: the canonical
@@ -214,8 +219,16 @@ def _lex_sort_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
     the full-row-sort Garcia flavour collapse into the same program — a
     k-independent full sort.  Both names stay registered for the serving/
     benchmark surface; s4 rows for them now measure the same executable.
+
+    Under ``precision="mixed"`` the bf16 widened-radius prefilter narrows the
+    validity mask first; the exact fp32 sort below then re-ranks only the
+    survivors — same bits (DESIGN.md §14).
     """
-    d2 = _masked_d2(qpos, cpos, valid)
+    dx = cpos[:, :, 0] - qpos[:, None, 0]
+    dy = cpos[:, :, 1] - qpos[:, None, 1]
+    if precision == "mixed":
+        valid = valid & mixed_prune_keep(dx, dy, best_d[:, k - 1])
+    d2 = jnp.where(valid, dx * dx + dy * dy, jnp.inf)
     all_d = jnp.concatenate([best_d, d2], axis=1)
     all_i = jnp.concatenate([best_i, cids.astype(jnp.int32)], axis=1)
     sd, si = jax.lax.sort((all_d, all_i), num_keys=2)
@@ -227,9 +240,16 @@ register_scan_backend("dense_topk")(_lex_sort_merge)
 
 
 @register_scan_backend("fused_bucket")
-def _fused_bucket_merge(qpos, cpos, cids, valid, best_d, best_i, k: int):
-    """Fused Pallas kernel; auto-interprets off-TPU (runtime.default_interpret)."""
-    return fused_scan_merge_op(qpos, cpos, cids, valid, best_d, best_i, k=k)
+def _fused_bucket_merge(qpos, cpos, cids, valid, best_d, best_i, k: int,
+                        precision: str = "fp32"):
+    """Fused Pallas kernel; auto-interprets off-TPU (runtime.default_interpret).
+
+    ``precision`` rides into the kernel as a static: the mixed-mode prefilter
+    runs on the VMEM-resident distance deltas, not as a separate pass.
+    """
+    return fused_scan_merge_op(
+        qpos, cpos, cids, valid, best_d, best_i, k=k, precision=precision
+    )
 
 
 register_scan_backend("brute")(_lex_sort_merge)
@@ -281,8 +301,58 @@ def _fused_merge_lists(d_a, i_a, d_b, i_b, k: int):
     return merge_topk_lists_op(d_a, i_a, d_b, i_b, k=k)
 
 
+def multi_merge_lists_op(d_all, i_all, *, k: int, interpret: bool | None = None):
+    """(R, Q, ≥k) per-shard lists -> (Q, k), ONE fused Pallas program.
+
+    The R-way fusion of the merge epilogue (DESIGN.md §14): each query's R
+    partial lists are laid side by side into one (Q, R*k) row — a pure
+    transpose/reshape, fused into the gather by XLA — and materialized by a
+    single ``merge_topk_multi`` dispatch.  Bit-identical to folding the same
+    lists through the binary tree (the canonical selection over a union is
+    associative; pinned in tests/test_kernels.py), but the (Q, k)
+    intermediates of the ``R - 1`` pairwise merges never exist, so partial
+    lists cross HBM exactly once.
+    """
+    r, q = d_all.shape[0], d_all.shape[1]
+    d_cat = jnp.swapaxes(d_all[:, :, :k], 0, 1).reshape(q, r * k)
+    i_cat = jnp.swapaxes(i_all[:, :, :k], 0, 1).reshape(q, r * k)
+    qp = int(np.ceil(max(q, 1) / _mt.Q_TILE)) * _mt.Q_TILE
+    d_cat = _pad_to(d_cat.astype(jnp.float32), qp, jnp.inf)
+    i_cat = _pad_to(i_cat.astype(jnp.int32), qp, -1)
+    out_d, out_i = _mt.merge_topk_multi(d_cat, i_cat, k=k, interpret=interpret)
+    return out_d[:q], out_i[:q]
+
+
+@register_merge_backend("fused_multi")
+def _fused_multi_lists(d_a, i_a, d_b, i_b, k: int):
+    """Binary form of the R-way fused merge (registry signature adapter).
+
+    Selecting ``merge="fused_multi"`` on a plan makes ``tree_merge_lists``
+    collapse the whole reduction into one ``multi_merge_lists_op`` dispatch;
+    this pairwise form exists so the name also satisfies the binary MERGE
+    contract (and its validation) on its own.  The contract admits lists of
+    different widths (narrower than k on under-full shards), so each side is
+    (inf, -1)-padded to a common k-column block before stacking.
+    """
+
+    def _block(d, i):
+        d = d[:, :k].astype(jnp.float32)
+        i = i[:, :k].astype(jnp.int32)
+        pad = k - d.shape[1]
+        if pad > 0:
+            q = d.shape[0]
+            d = jnp.concatenate(
+                [d, jnp.full((q, pad), jnp.inf, jnp.float32)], axis=1)
+            i = jnp.concatenate([i, jnp.full((q, pad), -1, jnp.int32)], axis=1)
+        return d, i
+
+    da, ia = _block(d_a, i_a)
+    db, ib = _block(d_b, i_b)
+    return multi_merge_lists_op(jnp.stack([da, db]), jnp.stack([ia, ib]), k=k)
+
+
 def tree_merge_lists(d_all, i_all, *, k: int, merge="dense_merge"):
-    """(R, Q, ≥k) per-shard lists -> (Q, k) merged list by a binary tree.
+    """(R, Q, ≥k) per-shard lists -> (Q, k) merged list.
 
     The reduction of the object-sharded plans (DESIGN.md §12): ``R`` partial
     result lists — one per object shard, each ascending and +inf/-1 padded —
@@ -293,10 +363,19 @@ def tree_merge_lists(d_all, i_all, *, k: int, merge="dense_merge"):
     equals ``knn`` over the union of the partitions (the composition law,
     pinned R-way in tests/test_kernels.py).
 
+    ``merge="fused_multi"`` short-circuits the tree entirely: the whole
+    reduction runs as ONE Pallas program over the (Q, R*k) concatenated row
+    (:func:`multi_merge_lists_op`) — same bits, no per-round HBM round-trips
+    (DESIGN.md §14).
+
     ``R`` need not be a power of two: odd tails pass through a round unmerged.
     Shapes are static (R is a Python int), so under ``jit`` the tree unrolls
     into a fixed ``log2 R``-deep program.
     """
+    if isinstance(merge, str) and merge == "fused_multi":
+        if d_all.shape[0] < 1:
+            raise ValueError("tree_merge_lists needs at least one shard list")
+        return multi_merge_lists_op(d_all, i_all, k=k)
     fn = get_merge_backend(merge) if isinstance(merge, str) else merge
     lists = [(d_all[r], i_all[r]) for r in range(d_all.shape[0])]
     if not lists:

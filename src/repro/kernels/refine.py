@@ -2,9 +2,11 @@
 
 Factored out of the individual kernels so each contract has a single
 kernel-side spelling: ``bucket_refine_step`` (the Alabi refinement round with
-its float-edge guard, DESIGN.md §4 — from ``bucket_kselect``/``fused_scan``)
-and ``masked_argmin_rounds`` (the ascending top-k materialization with the
-inf→-1 id padding rule — from ``topk_select``/``fused_scan``/``merge_topk``).
+its float-edge guard, DESIGN.md §4 — from ``bucket_kselect``/``fused_scan``),
+``masked_argmin_rounds`` (the ascending top-k materialization with the
+inf→-1 id padding rule — from ``topk_select``/``fused_scan``/``merge_topk``)
+and ``mixed_prune_keep`` (the bf16 widened-radius prefilter of the
+``precision="mixed"`` sweep mode, DESIGN.md §14 — from the SCAN backends).
 The jnp oracles (``kernels/ref.py``, ``core/kselect.py``) keep independent
 mirrors on purpose — they are the correctness contracts the allclose sweeps
 compare the kernels against.
@@ -14,7 +16,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bucket_refine_step", "masked_argmin_rounds"]
+__all__ = [
+    "MIXED_WIDEN",
+    "bucket_refine_step",
+    "masked_argmin_rounds",
+    "mixed_prune_keep",
+]
+
+# Widening factor of the mixed-precision prefilter (DESIGN.md §14).  The bf16
+# pass computes d2_b from fp32 deltas rounded to bf16 (two casts, two squares,
+# one add — five roundings at machine epsilon 2^-8), so
+# ``d2_b <= d2_f32 * (1 + 2^-8)^5 < d2_f32 * (1 + 6 * 2^-8)``.  Widening the
+# k-th-distance threshold by 16 * 2^-8 = 2^-4 (>2.5x the bound) guarantees no
+# candidate with ``d2_f32 <= kth`` is ever pruned — the exact-refine pass then
+# returns bitwise-identical lists to fp32 (the pruned candidates are provably
+# strictly beyond the current k-th distance, so they cannot enter the merged
+# list even via the lowest-id tie-break).
+MIXED_WIDEN = 1.0 + 2.0 ** -4
+
+
+def mixed_prune_keep(dx, dy, kth):
+    """bf16 widened-radius prefilter: keep-mask over a candidate window.
+
+    ``dx``/``dy`` are the (T, W) **fp32 coordinate deltas** (candidate minus
+    query — cast AFTER the subtraction: casting raw coordinates first would
+    lose the cancellation that makes the error bound *relative*), ``kth`` the
+    (T,) current exact k-th distance per query (``best_d[:, k-1]``; ``inf``
+    while the list is under-filled, which keeps everything).  Returns the
+    (T, W) bool mask of candidates inside the conservatively widened k-th
+    boundary.  The comparison is inclusive so exact k-th-distance ties (which
+    can enter the list via the lowest-id rule) always survive.
+    """
+    dxb = dx.astype(jnp.bfloat16)
+    dyb = dy.astype(jnp.bfloat16)
+    d2b = (dxb * dxb + dyb * dyb).astype(jnp.float32)
+    return d2b <= kth[:, None] * jnp.float32(MIXED_WIDEN)
 
 
 def masked_argmin_rounds(d, ids, k: int):

@@ -55,6 +55,9 @@ def _engine(spec):
     (dict(side=-1.0), r"side"),
     (dict(delta_pad=0), r"delta_pad"),
     (dict(partitioner="nope"), r"unknown partitioner 'nope'.*cost_balanced"),
+    (dict(precision="nope"), r"unknown precision 'nope'.*mixed"),
+    (dict(merge="nope"), r"unknown merge backend 'nope'.*fused_multi"),
+    (dict(collect="nope"), r"unknown collect mode 'nope'.*stats"),
 ])
 def test_service_spec_validates_eagerly(bad, match):
     with pytest.raises(ValueError, match=match):
@@ -75,10 +78,12 @@ def test_engine_config_validates_eagerly(bad, match):
 
 def test_spec_subsumes_engine_config_roundtrip():
     cfg = EngineConfig(k=8, th_quad=48, l_max=6, window=64, chunk=1024,
-                       backend="brute", plan="sharded", mesh_shape=1)
+                       backend="brute", plan="sharded", mesh_shape=1,
+                       precision="mixed", merge="fused_multi")
     spec = ServiceSpec.from_engine(cfg, origin=(1.0, 2.0), side=9_000.0)
     assert spec.engine_config() == cfg
     assert spec.origin == (1.0, 2.0) and spec.side == 9_000.0
+    assert spec.precision == "mixed" and spec.merge == "fused_multi"
 
 
 # ------------------------------------------------- delta-update parity (tent)
@@ -598,6 +603,243 @@ def test_update_objects_duplicate_ids_last_wins():
     ref_r = ref.process_tick(expect, pts, np.arange(300, dtype=np.int32))
     np.testing.assert_array_equal(r.nn_idx, ref_r.nn_idx)
     np.testing.assert_array_equal(r.nn_dist, ref_r.nn_dist)
+
+
+# --------------------------------- on-device result consumers (DESIGN.md §14)
+
+def test_collect_stats_aggregates_match_full_results():
+    """collect="stats": nn lists never cross the host boundary; the sink's
+    aggregates agree with what the full lists imply — k-th distances
+    bitwise, zero drift/churn on a static workload, shard hit total = Q*k,
+    first tick churn = 1 (no previous observation)."""
+    rng = np.random.default_rng(31)
+    pts = rng.uniform(0, 22_500, (500, 2)).astype(np.float32)
+    q = rng.uniform(0, 22_500, (64, 2)).astype(np.float32)
+
+    full = KnnSession(_spec())
+    full.ingest_objects(pts)
+    full.register_queries(q)
+    f0 = full.submit().result()
+    f1 = full.submit().result()
+
+    sess = KnnSession(_spec(collect="stats"))
+    sess.ingest_objects(pts)
+    sess.register_queries(q)
+    r0 = sess.submit().result()
+    r1 = sess.submit().result()
+    assert r0.nn_idx is None and r0.nn_dist is None
+    a0, a1 = r0.aggregates, r1.aggregates
+    assert float(a0.churn_mean) == 1.0 and float(a0.churn_max) == 1.0
+    assert float(a1.churn_mean) == 0.0 and float(a1.kth_drift_mean) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(a1.kth_dist)[:64], f1.nn_dist[:, -1])
+    assert int(a1.n_live) == 64
+    assert float(np.asarray(a1.shard_hits).sum()) == 64 * sess.spec.k
+    # bookkeeping unaffected by the collect mode
+    assert r1.candidates == f1.candidates
+    assert r1.iterations == f1.iterations
+    np.testing.assert_array_equal(r1.shard_candidates, f1.shard_candidates)
+
+
+@pytest.mark.parametrize("plan", ["object_sharded", "hybrid"])
+def test_collect_stats_shard_hits_follow_object_partition(plan):
+    """Under the object-axis plans the hit histogram spans the mesh's object
+    shards and matches a host-side recount from the full lists + the
+    session's own ownership answer."""
+    w = make_workload(400, "gaussian", seed=11, hotspots=3)
+    pts = w.positions()
+    qid = np.arange(64, dtype=np.int32)
+    spec = _spec(plan=plan, chunk=32,
+                 mesh_shape=NDEV if plan == "object_sharded" else None,
+                 collect="stats")
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(pts[:64], qid)
+    r = sess.submit().result()
+    hits = np.asarray(r.aggregates.shard_hits)
+    assert hits.shape == (sess.plan.object_axis_size,)
+    assert hits.sum() == 64 * spec.k
+    full = KnnSession(_spec(plan=plan, chunk=32, mesh_shape=spec.mesh_shape))
+    full.ingest_objects(pts)
+    full.register_queries(pts[:64], qid)
+    rf = full.submit().result()
+    owners = sess.object_shards(rf.nn_idx.reshape(-1))
+    np.testing.assert_array_equal(
+        hits, np.bincount(owners, minlength=hits.shape[0]))
+
+
+def test_collect_none_ships_nothing():
+    """collect="none": the result record carries only the bookkeeping the
+    finalize scalars already paid for — no lists, no counters, no transfer
+    time — while the drift-rebuild sequence stays identical to full."""
+    n = 3000
+    rng = np.random.default_rng(12)
+    uniform = rng.uniform(0, 22_500, (n, 2)).astype(np.float32)
+    clustered = (rng.normal(0, 60, (n, 2)) + 11_250).astype(
+        np.float32).clip(0, 22_499)
+    qid = np.arange(n, dtype=np.int32)
+
+    def drive(collect):
+        sess = KnnSession(_spec(k=16, th_quad=32, l_max=6, window=64,
+                                chunk=1024, rebuild_factor=1.5,
+                                collect=collect))
+        sess.ingest_objects(uniform)
+        hq = sess.register_queries(uniform, qid)
+        out = [sess.submit().result(), sess.submit().result()]
+        sess.update_objects(np.arange(n, dtype=np.int32), clustered)
+        sess.update_queries(hq, clustered)
+        out.append(sess.submit().result())
+        return out
+
+    none_res = drive("none")
+    full_res = drive("full")
+    for rn, rf in zip(none_res, full_res):
+        assert rn.nn_idx is None and rn.nn_dist is None
+        assert rn.shard_candidates is None and rn.aggregates is None
+        assert rn.collect_s == 0.0
+        assert rn.rebuilt == rf.rebuilt
+        assert rn.candidates == rf.candidates
+        assert rn.iterations == rf.iterations
+    assert none_res[2].rebuilt  # the teleport's drift trigger still fired
+
+
+def test_collect_stats_churn_resets_on_registry_change():
+    """The sink's cross-tick memory is row-aligned with the padded registry
+    batch: a row-set change resets it (churn reports 1 again) instead of
+    comparing against another query's stale neighbour list."""
+    rng = np.random.default_rng(44)
+    pts = rng.uniform(0, 22_500, (400, 2)).astype(np.float32)
+    sess = KnnSession(_spec(collect="stats"))
+    sess.ingest_objects(pts)
+    sess.register_queries(pts[:40])
+    sess.submit().result()
+    r1 = sess.submit().result()
+    assert float(r1.aggregates.churn_mean) == 0.0
+    sess.register_queries(pts[40:50])  # row set changed -> sink state reset
+    r2 = sess.submit().result()
+    assert float(r2.aggregates.churn_mean) == 1.0
+    r3 = sess.submit().result()
+    assert float(r3.aggregates.churn_mean) == 0.0
+
+
+def test_result_for_device_rows_under_stats_mode():
+    """result_for under collect="stats" serves device-array rows (no host
+    transfer of the lists) and refuses after the buffers are released."""
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 22_500, (300, 2)).astype(np.float32)
+    sess = KnnSession(_spec(collect="stats"))
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts[:32])
+    h = sess.submit()
+    di, dd, dq = h.result_for(hq)
+    assert isinstance(di, jax.Array) and di.shape == (32, sess.spec.k)
+    full = KnnSession(_spec())
+    full.ingest_objects(pts)
+    full.register_queries(pts[:32])
+    rf = full.submit().result()
+    np.testing.assert_array_equal(np.asarray(di), rf.nn_idx)
+    np.testing.assert_array_equal(np.asarray(dd), rf.nn_dist)
+    h.result()  # materializes the aggregates, releases the list buffers
+    with pytest.raises(RuntimeError, match="never transferred"):
+        h.result_for(hq)
+
+
+def test_mixed_precision_session_bitwise_over_ticks():
+    """precision="mixed" through the session (delta ingest, drift rebuild)
+    == fp32, tick for tick, bitwise (DESIGN.md §14)."""
+    w = make_workload(500, "gaussian", seed=2, hotspots=4)
+    qid = np.arange(500, dtype=np.int32)
+    frames = []
+    for _ in range(3):
+        frames.append(w.positions().copy())
+        w.advance()
+
+    def drive(precision):
+        sess = KnnSession(_spec(precision=precision))
+        sess.ingest_objects(frames[0])
+        hq = sess.register_queries(frames[0], qid)
+        out = []
+        for t, p in enumerate(frames):
+            if t > 0:
+                moved = np.nonzero((p != frames[t - 1]).any(1))[0].astype(
+                    np.int32)
+                sess.update_objects(moved, p[moved])
+                sess.update_queries(hq, p)
+            out.append(sess.submit().result())
+        return out
+
+    for rm, rf in zip(drive("mixed"), drive("fp32")):
+        np.testing.assert_array_equal(rm.nn_idx, rf.nn_idx)
+        np.testing.assert_array_equal(rm.nn_dist, rf.nn_dist)
+        assert rm.rebuilt == rf.rebuilt
+
+
+# ---------------------------- in-flight device handles (satellite, §14)
+
+def test_device_handles_stay_valid_across_submits_and_rebuild():
+    """Two-in-flight materialize=False contract: tick τ's device arrays stay
+    valid (and correct) after τ+1 submits, and after a drift rebuild is
+    applied between τ's submit and τ's result — nothing donates or
+    overwrites the result buffers."""
+    n, k = 2000, 8
+    rng = np.random.default_rng(27)
+    uniform = rng.uniform(0, 22_500, (n, 2)).astype(np.float32)
+    clustered = (rng.normal(0, 60, (n, 2)) + 11_250).astype(
+        np.float32).clip(0, 22_499)
+    qid = np.arange(n, dtype=np.int32)
+
+    spec = _spec(k=k, th_quad=32, l_max=6, window=64, chunk=512,
+                 rebuild_factor=1.5)
+    eng = _engine(spec)
+    ref = [eng.process_tick(uniform, uniform, qid),
+           eng.process_tick(uniform, uniform, qid),
+           eng.process_tick(clustered, clustered, qid),
+           eng.process_tick(clustered, clustered, qid)]
+
+    sess = KnnSession(spec)
+    sess.ingest_objects(uniform)
+    hq = sess.register_queries(uniform, qid)
+    h0 = sess.submit()
+    h1 = sess.submit()  # two in flight; h0 finalized here
+    dev0 = h0.result(materialize=False)
+    sess.update_objects(qid, clustered)
+    sess.update_queries(hq, clustered)
+    h2 = sess.submit()  # the drift tick; h1 finalized here
+    dev1 = h1.result(materialize=False)
+    h3 = sess.submit()  # finalizing h2 applies the REBUILD before dispatch
+    # h2's device arrays were produced pre-rebuild; the rebuild between its
+    # submit and this read must not invalidate or corrupt them
+    dev2 = h2.result(materialize=False)
+    assert h2._finalized and h2.result().rebuilt
+    r3 = h3.result()
+    assert not r3.rebuilt
+    for dev, r in zip((dev0, dev1, dev2), ref):
+        assert isinstance(dev.nn_idx, jax.Array)
+        np.testing.assert_array_equal(np.asarray(dev.nn_idx), r.nn_idx)
+        np.testing.assert_array_equal(np.asarray(dev.nn_dist), r.nn_dist)
+    np.testing.assert_array_equal(r3.nn_idx, ref[3].nn_idx)
+
+
+def test_device_aggregates_stay_valid_with_two_in_flight():
+    """Same contract for the stats sink's device aggregates: τ's aggregate
+    arrays survive τ+1's submit (the sink state advances functionally)."""
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(0, 22_500, (400, 2)).astype(np.float32)
+    sess = KnnSession(_spec(collect="stats"))
+    sess.ingest_objects(pts)
+    hq = sess.register_queries(pts[:48])
+    h0 = sess.submit()
+    moved = pts[:48] + 25.0
+    sess.update_queries(hq, np.clip(moved, 0, 22_499).astype(np.float32))
+    h1 = sess.submit()
+    d0 = h0.result(materialize=False)
+    d1 = h1.result(materialize=False)
+    assert isinstance(d0.aggregates.kth_dist, jax.Array)
+    assert float(d0.aggregates.churn_mean) == 1.0  # first tick
+    assert 0.0 <= float(d1.aggregates.churn_mean) <= 1.0
+    r0 = h0.result()
+    assert isinstance(r0.aggregates.kth_dist, np.ndarray)
+    assert float(r0.aggregates.churn_mean) == 1.0
 
 
 # ------------------------------------------------------- error surface

@@ -4,11 +4,13 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
+    MIXED_WIDEN,
     bucket_kselect_op,
     bucket_kselect_ref,
     merge_backend_names,
     get_merge_backend,
     merge_topk_lists_ref,
+    mixed_prune_keep,
     pairwise_dist_op,
     pairwise_dist_ref,
     topk_select_op,
@@ -74,6 +76,36 @@ def test_topk_select_with_infs():
     out_d, out_i = topk_select_op(d2, ids, k=3)
     assert list(np.asarray(out_i)[0][:2]) == [12, 10]
     assert int(np.asarray(out_i)[0][2]) == -1  # inf slot -> padded id
+
+
+@pytest.mark.parametrize("scale", [1.0, 1e3, 22_500.0])
+@pytest.mark.parametrize("seed", [0, 7, 91])
+def test_mixed_prune_keep_is_conservative(seed, scale):
+    """The bf16 widened-radius prefilter NEVER drops a candidate at or
+    inside the exact k-th boundary (the bitwise-identity precondition of
+    the mixed sweep, DESIGN.md §14) — coincident points, near-boundary
+    candidates and kth = inf under-full rows included; and the widening
+    really is wider than the accumulated bf16 relative error."""
+    assert MIXED_WIDEN > (1 + 2.0 ** -8) ** 5  # margin over 5 roundings
+    rng = np.random.default_rng(seed)
+    t, w = 16, 256
+    qpos = rng.uniform(0, scale, (t, 2)).astype(np.float32)
+    cpos = rng.uniform(0, scale, (t, w, 2)).astype(np.float32)
+    cpos[:, :7] = qpos[:, None, :]  # coincident candidates (d2 = 0)
+    dx = jnp.asarray(cpos[:, :, 0] - qpos[:, None, 0])
+    dy = jnp.asarray(cpos[:, :, 1] - qpos[:, None, 1])
+    d2 = np.asarray(dx * dx + dy * dy)
+    k = 8
+    kth = np.sort(d2, axis=1)[:, k - 1].astype(np.float32)
+    kth[0] = np.inf  # under-full row: everything must be kept
+    keep = np.asarray(mixed_prune_keep(dx, dy, jnp.asarray(kth)))
+    inside = d2 <= kth[:, None]
+    assert (keep | ~inside).all(), "prefilter dropped an in-boundary candidate"
+    assert keep[0].all()  # kth = inf keeps the whole window
+    # and it really prunes: far-away candidates don't survive
+    assert (~keep[1:] & (d2[1:] > 2.0 * kth[1:, None])).sum() > 0 or (
+        np.isinf(kth[1:]).all()
+    )
 
 
 def _ascending_lists(q, width, k, seed, lo=0.0, hi=100.0, id_base=0):

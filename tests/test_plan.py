@@ -88,6 +88,51 @@ def test_resolve_plan_defaults():
         resolve_plan("hybrid", num_devices=(2, 2, 2))
 
 
+def test_resolve_plan_merge_axis():
+    """The MERGE backend rides the same resolution seam as the partitioner:
+    named object-axis plans pick it up; plans without an object axis ignore
+    it; unknown names fail eagerly at the registry."""
+    o = resolve_plan("object_sharded", merge="fused_multi")
+    assert isinstance(o, ObjectShardedPlan) and o.merge == "fused_multi"
+    h = resolve_plan("hybrid", merge="fused_multi")
+    assert isinstance(h, HybridPlan) and h.merge == "fused_multi"
+    assert resolve_plan("object_sharded").merge == "dense_merge"
+    # query-axis-only plans have no merge reduce: the knob is ignored
+    assert resolve_plan("single", merge="fused_multi") == SinglePlan()
+    assert resolve_plan("sharded", merge="fused_multi") == ShardedPlan(
+        num_devices=NDEV)
+    with pytest.raises(ValueError, match="unknown merge backend"):
+        knn_query_batch_chunked(
+            _tiny_index(), np.zeros((4, 2), np.float32), None,
+            k=2, chunk=4, plan="object_sharded", num_devices=1, merge="nope",
+        )
+
+
+@pytest.mark.parametrize("plan,mesh", [
+    ("object_sharded", None),
+    ("hybrid", None),
+])
+def test_fused_multi_merge_plan_parity(plan, mesh):
+    """merge="fused_multi" (one multi-way kernel over the concatenated
+    per-shard lists — no HBM round-trip between binary-tree rounds) must
+    reproduce the dense_merge bits on the object-axis plans: the canonical
+    ``(d2, id)`` selection is associative, so a multi-way selection over
+    R·k entries equals the binary reduction tree (DESIGN.md §14)."""
+    w = make_workload(600, "gaussian", seed=6, hotspots=4)
+    pts = w.positions()
+    qpos, qid = w.query_batch()
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), 22_500.0, l_max=6,
+                      th_quad=24)
+    ref_i, ref_d, _ = knn_query_batch_chunked(
+        idx, qpos, qid, k=6, window=32, chunk=32, plan="single")
+    for merge in ("dense_merge", "fused_multi"):
+        ii, dd, _ = knn_query_batch_chunked(
+            idx, qpos, qid, k=6, window=32, chunk=32, plan=plan,
+            num_devices=mesh, merge=merge)
+        np.testing.assert_array_equal(ii, ref_i, err_msg=f"{plan}/{merge}")
+        np.testing.assert_array_equal(dd, ref_d, err_msg=f"{plan}/{merge}")
+
+
 def test_plan_pad_multiples_and_object_axis():
     """Query padding granularity: chunk per query-axis device; the object
     axis never pads queries (the batch is replicated across it)."""

@@ -18,7 +18,9 @@ mesh plans run under BOTH registered partitioners — ``equal`` (the static
 equal-count splits) and ``cost_balanced`` (skew-adaptive boundaries from the
 count-pyramid cost seed) — and must stay bit-identical either way: the
 partitioner only moves chunk/slice boundaries, and results are a pure
-function of the candidate set.
+function of the candidate set.  DESIGN.md §14 added a fourth axis, sweep
+*precision*: ``mixed`` (bf16 widened-radius prefilter + exact fp32 refine)
+must reproduce the fp32 bits across the entire matrix, fuzzed below.
 
 Runs on however many devices exist: the tier-1 job exercises the matrix on
 1 device, the tier1-multidevice job on a forced 8-device grid where
@@ -112,10 +114,12 @@ def _check_oracle(pts, qpos, qid, ii, dd, k):
         assert want == got, (r, want, got)
 
 
-def _sweep(idx, qpos, qid, *, k, backend, plan, mesh, partitioner="equal"):
+def _sweep(idx, qpos, qid, *, k, backend, plan, mesh, partitioner="equal",
+           precision=None, merge=None):
     ii, dd, _ = knn_query_batch_chunked(
         idx, qpos, qid, k=k, window=16, chunk=16, backend=backend,
-        plan=plan, num_devices=mesh, partitioner=partitioner,
+        precision=precision, plan=plan, num_devices=mesh,
+        partitioner=partitioner, merge=merge,
     )
     return ii, dd
 
@@ -163,6 +167,46 @@ def test_full_matrix_bit_identical(seed, family, dup_every, zipf_a):
                 ii, base_i, err_msg=f"ids {backend}/{plan}/{part}")
             np.testing.assert_array_equal(
                 dd, base_d, err_msg=f"dists {backend}/{plan}/{part}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),  # seed
+    st.integers(min_value=0, max_value=2),       # family
+    st.integers(min_value=1, max_value=6),       # dup_every
+    st.floats(min_value=1.2, max_value=3.5),     # zipf_a
+)
+def test_mixed_precision_bit_identical(seed, family, dup_every, zipf_a):
+    """``precision="mixed"`` == ``fp32``, bitwise, for every backend across
+    the whole plan × partitioner grid — including the fused-multi merge on
+    the object-axis plans.
+
+    The mixed sweep prepends a bf16 distance pass that prunes candidates
+    outside a conservatively *widened* k-th-distance radius and re-ranks
+    only the survivors in exact fp32 (DESIGN.md §14).  The widening bound
+    (``MIXED_WIDEN`` > the accumulated bf16 relative error) guarantees no
+    candidate at or inside the true k-th boundary is ever pruned, so the
+    exact pass sees the same effective candidate set and the canonical
+    ``(d2, id)`` selection produces the same bits — duplicates, Zipf skew
+    and ``kth = inf`` under-full rows included.
+    """
+    pts = _cloud(seed, 96, family, dup_every, zipf_a)
+    qpos, qid = _queries(pts, 24, seed)
+    k = 6
+    idx = build_index(jnp.asarray(pts), jnp.zeros(2), SIDE, l_max=5, th_quad=8)
+    for backend in available_backends():
+        base_i, base_d = _sweep(idx, qpos, qid, k=k, backend=backend,
+                                plan="single", mesh=None)
+        for plan, mesh, part in PLAN_GRID:
+            merge = "fused_multi" if plan in ("object_sharded",
+                                              "hybrid") else None
+            ii, dd = _sweep(idx, qpos, qid, k=k, backend=backend,
+                            plan=plan, mesh=mesh, partitioner=part,
+                            precision="mixed", merge=merge)
+            np.testing.assert_array_equal(
+                ii, base_i, err_msg=f"ids mixed {backend}/{plan}/{part}")
+            np.testing.assert_array_equal(
+                dd, base_d, err_msg=f"dists mixed {backend}/{plan}/{part}")
 
 
 @settings(max_examples=5, deadline=None)
