@@ -8,10 +8,16 @@ iteration counts, ``TickResult.collect_s``) from a short live session — not
 from guessed densities — so the table justifies each optimisation against
 hardware limits rather than vibes:
 
-  reindex — Morton encode + sort + gather reorder of the object table.
-            Negligible FLOPs over ~N·log N bytes of sort traffic: firmly
-            bandwidth-bound, which is why the delta path's win is staging
-            bytes, not arithmetic.
+  reindex — split into recode / sort / pyramid sub-bars, each modeled for
+            BOTH maintenance modes (DESIGN.md §15): the rebuild column pays
+            O(N) in every sub-bar (encode all N, full comparison sort,
+            full bincount); the incremental column pays the recode and
+            pyramid bars in Δ (the measured ``update_fraction`` of N) and
+            the sort bar in Δ log Δ + Δ log N search traffic plus the two
+            O(N) cumsums and output gathers of the sparse splice plan.
+            All sub-bars are bandwidth-bound — the delta path's win is
+            staging bytes, not arithmetic, and the table shows exactly
+            which bytes stop scaling with N.
   sweep   — the distance/prune pass over the measured candidate volume.
             fp32 reads 12 B/candidate; ``precision="mixed"`` reads bf16
             positions (8 B/candidate with the id) and re-ranks only the
@@ -104,23 +110,80 @@ def _collected_bytes(collect, nq, q_padded, k, r_total=1, r_obj=1):
     return nq * k * 8 + counters
 
 
+def _reindex_stages(n, delta_rows, l_max):
+    """The reindex stage split into recode/sort/pyramid sub-bars, modeled
+    for both maintenance modes.  Rebuild pays O(N) everywhere; incremental
+    (the sparse splice plan, DESIGN.md §15) pays Δ in the recode and
+    pyramid bars and Δ·log + two O(N) cumsums + O(N) output gathers in the
+    sort bar — the residual O(N) terms are gather/cumsum streams, not sort
+    passes, which is the whole win."""
+    d = delta_rows
+    pyr = (4 ** (l_max + 1) - 1) // 3  # flattened count-pyramid cells
+    log_n = max(1, math.ceil(math.log2(max(n, 2))))
+    sort_passes = max(1, math.ceil(log_n / 8))
+    sort_passes_d = max(1, math.ceil(math.log2(max(d, 2)) / 8))
+    return [
+        # recode: read (x,y) f32, write code i32, ~30 bit-ops/pt.  The
+        # incremental path encodes each moved row twice (old + new key).
+        {
+            "stage": "reindex[rebuild:recode]",
+            "bytes": n * 12,
+            "flops": n * 30,
+            "model": f"morton encode all N={n}",
+        },
+        {
+            "stage": "reindex[incremental:recode]",
+            "bytes": 2 * d * 12,
+            "flops": 2 * d * 30,
+            "model": f"old+new codes for the D={d} moved rows only",
+        },
+        # sort: radix-style byte digits, read+write 8 B/pt/pass over
+        # (code, id) pairs, then gather-reorder pos+ids (12 B/pt r+w).
+        {
+            "stage": "reindex[rebuild:sort]",
+            "bytes": sort_passes * 2 * n * 8 + 2 * n * 12,
+            "flops": n * log_n,
+            "model": f"{sort_passes}-pass sort of N pairs + gather reorder",
+        },
+        # incremental: sort just the Δ run, binary-search 2Δ keys against
+        # the N-row order (log N gathers of 8 B each), then the sparse
+        # splice plan's two O(N) cumsums (i32 r+w) and the O(N) output
+        # gathers of pos+ids+codes (16 B read + write per row).
+        {
+            "stage": "reindex[incremental:sort]",
+            "bytes": (sort_passes_d * 2 * d * 8 + 2 * d * log_n * 8
+                      + 2 * 2 * n * 8 + 2 * n * 16),
+            "flops": 4 * d * log_n + 2 * n,
+            "model": (f"D-run sort + 2D searches (log2 N = {log_n}) + "
+                      "2 cumsums + output gathers, all O(N) terms "
+                      "streaming"),
+        },
+        # pyramid: counts at the fine level + l_max reshape-sum rollups +
+        # the starts cumsum.  Rebuild bincounts all N codes; incremental
+        # scatter-adds ±1 at 2Δ fine cells — the rollup cost is fixed.
+        {
+            "stage": "reindex[rebuild:pyramid]",
+            "bytes": n * 4 + 3 * pyr * 4,
+            "flops": n + 2 * pyr,
+            "model": f"bincount over N + {l_max}-level rollup + starts",
+        },
+        {
+            "stage": "reindex[incremental:pyramid]",
+            "bytes": 2 * d * 4 + 3 * pyr * 4,
+            "flops": 2 * d + 2 * pyr,
+            "model": f"±1 scatters at 2D fine cells + fixed rollup ({pyr} "
+                     "pyramid cells)",
+        },
+    ]
+
+
 def build_stages(objects, queries, q_padded, k, candidates, r_obj,
-                 collect_ms):
+                 collect_ms, delta_rows, l_max):
     """The per-stage (bytes, flops) volumes.  Every count is a documented
     first-order model over workload parameters + measured counters."""
     n, c = objects, candidates
     stages = []
-
-    # reindex: encode (read (x,y) f32, write code i32: ~30 bit-ops/pt),
-    # sort (code, id) pairs (radix-style: byte digits, read+write 8 B/pt
-    # per pass), gather-reorder positions+ids by sorted rank (12 B/pt r+w)
-    sort_passes = max(1, math.ceil(math.log2(max(n, 2)) / 8))
-    stages.append({
-        "stage": "reindex",
-        "bytes": n * 12 + sort_passes * 2 * n * 8 + 2 * n * 12,
-        "flops": n * 30,
-        "model": f"morton encode + {sort_passes}-pass sort + gather, N={n}",
-    })
+    stages.extend(_reindex_stages(n, delta_rows, l_max))
 
     # sweep: per candidate read the (x,y) position + id, ~8 flops
     # (2 sub, 2 mul, 1 add, compare + amortized selection update)
@@ -188,14 +251,14 @@ def annotate(stages, peak_gflops, peak_gbs):
 
 
 def fmt_table(stages):
-    hdr = (f"{'stage':18s} {'MB':>9s} {'MFLOP':>9s} {'F/B':>7s} "
+    hdr = (f"{'stage':28s} {'MB':>9s} {'MFLOP':>9s} {'F/B':>7s} "
            f"{'mem_ms':>8s} {'cmp_ms':>8s} {'bound':>7s} {'meas_ms':>8s}")
     rows = [hdr, "-" * len(hdr)]
     for s in stages:
         meas = s.get("measured_ms")
         meas_str = f"{meas:8.3f}" if meas is not None else f"{'—':>8s}"
         rows.append(
-            f"{s['stage']:18s} {s['bytes'] / 1e6:9.3f} "
+            f"{s['stage']:28s} {s['bytes'] / 1e6:9.3f} "
             f"{s['flops'] / 1e6:9.2f} {s['intensity_flops_per_byte']:7.2f} "
             f"{s['memory_s'] * 1e3:8.3f} {s['compute_s'] * 1e3:8.3f} "
             f"{s['dominant']:>7s} {meas_str}"
@@ -221,9 +284,10 @@ def run(
     cand, iters, collect_ms, steady = _measure(
         objects, queries, ticks, k, chunk, window, update_fraction)
     q_padded = pad_capacity(queries, chunk)
+    delta_rows = max(1, int(objects * update_fraction))  # same Δ _measure moves
     stages = annotate(
         build_stages(objects, queries, q_padded, k, cand, obj_shards,
-                     collect_ms),
+                     collect_ms, delta_rows, l_max=7),
         peak_gflops, peak_gbs,
     )
     print(f"per-stage roofline: N={objects} Q={queries} k={k} "
@@ -233,10 +297,12 @@ def run(
     print(fmt_table(stages))
     if out:
         rec = {
-            "schema": 1,
+            "schema": 2,  # schema 2: reindex split into recode/sort/pyramid
+            # sub-bars x rebuild/incremental (delta-aware volumes)
             "objects": objects, "queries": queries, "k": k, "chunk": chunk,
             "window": window, "ticks": ticks,
             "update_fraction": update_fraction,
+            "delta_rows_modeled": delta_rows,
             "obj_shards_modeled": obj_shards,
             "peak_gflops": peak_gflops, "peak_gbs": peak_gbs,
             "measured": {

@@ -22,11 +22,19 @@ on-device ResultSink aggregates (k-th-distance drift, neighbour churn,
 shard-hit histogram — DESIGN.md §14); ``--precision mixed`` runs the sweep
 as a bf16 prune + exact fp32 refine with bitwise-identical results.
 
+``--maintenance incremental`` turns on the delta index-maintenance path
+(DESIGN.md §15): each tick's reindex splices only the moved rows into the
+device-resident sorted order instead of re-sorting all N — pair it with
+``--churn F`` to move only a random fraction ``F`` of the objects per tick
+(the default 1.0 moves everything, where the churn budget correctly defers
+to a full rebuild).
+
   PYTHONPATH=src python examples/moving_objects_service.py \
       [--objects N] [--ticks T] \
       [--plan single|sharded|object_sharded|hybrid] [--devices D] \
       [--mesh QxO] [--partitioner equal|cost_balanced] \
-      [--ingest snapshot|delta] [--overlap] \
+      [--ingest snapshot|delta] [--overlap] [--churn F] \
+      [--maintenance rebuild|incremental] \
       [--precision fp32|mixed] [--merge dense_merge|fused_multi] \
       [--collect full|stats|none]
 
@@ -78,6 +86,16 @@ def _parse_args():
     ap.add_argument("--overlap", action="store_true",
                     help="submit tick t+1 while tick t's results are in "
                          "flight (double-buffer staging vs compute)")
+    ap.add_argument("--maintenance", default="rebuild",
+                    choices=["rebuild", "incremental"],
+                    help="per-tick index refresh: full re-sort, or the "
+                         "delta splice that pays for churn, not for N "
+                         "(DESIGN.md §15; bitwise-identical results)")
+    ap.add_argument("--churn", type=float, default=1.0, metavar="F",
+                    help="fraction of objects that actually move per tick "
+                         "(default 1.0 = all); with --ingest delta only the "
+                         "churned rows cross the host, which is what lets "
+                         "--maintenance incremental engage")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "mixed"],
                     help="sweep precision: fp32, or the bf16 prune + exact "
@@ -127,6 +145,7 @@ def main():
                            backend=args.backend, plan=args.plan,
                            mesh_shape=mesh_shape,
                            partitioner=args.partitioner,
+                           maintenance=args.maintenance,
                            precision=args.precision, merge=args.merge,
                            collect=args.collect)
     except ValueError as e:  # eager validation lists the registries
@@ -139,6 +158,7 @@ def main():
     print(f"serving {args.objects} objects x {args.ticks} ticks "
           f"({args.distribution}, k={args.k}, backend={args.backend}, "
           f"ingest={args.ingest}, overlap={args.overlap}, "
+          f"maintenance={args.maintenance}, churn={args.churn:g}, "
           f"precision={args.precision}, collect={args.collect})")
     print(f"{session.plan.describe()}  (jax sees {jax.device_count()} "
           f"{jax.default_backend()} device(s))")
@@ -147,6 +167,8 @@ def main():
         # under --overlap, res.wall_s spans submit..collection (one round
         # late); tick_s is the true per-round serve time measured here
         extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
+        if args.maintenance != "rebuild":
+            extra += f" maint={res.maintenance}"
         if res.aggregates is not None:  # --collect stats: the sink's O(Q)
             a = res.aggregates
             extra += (f" drift={float(a.kth_drift_mean):.1f}"
@@ -158,6 +180,8 @@ def main():
 
     # seed device-resident state once; thereafter only motion crosses the host
     session.ingest_objects(workload.positions())
+    cur = np.asarray(workload.positions(), np.float32).copy()
+    churn_rng = np.random.default_rng(1)
     qpos, qid = workload.query_batch(1.0)
     hq = session.register_queries(qpos, qid)
 
@@ -175,10 +199,20 @@ def main():
     for t in range(args.ticks):
         if t > 0:
             workload.advance()
-            if args.ingest == "delta":
-                session.update_objects(all_ids, workload.positions())
+            new = np.asarray(workload.positions(), np.float32)
+            if args.churn < 1.0:
+                # only a random F-fraction of the fleet actually moves —
+                # the regime the incremental maintenance path is built for
+                d = max(1, int(round(args.objects * args.churn)))
+                ids = churn_rng.choice(args.objects, d,
+                                       replace=False).astype(np.int32)
+                cur[ids] = new[ids]
             else:
-                session.ingest_objects(workload.positions())
+                ids, cur = all_ids, new.copy()
+            if args.ingest == "delta":
+                session.update_objects(ids, cur[ids])
+            else:
+                session.ingest_objects(cur)
             session.update_queries(hq, workload.query_batch(1.0)[0])
         handle = session.submit()
         if pending is not None:

@@ -78,6 +78,7 @@ class TickHandle:
         rebuilt_pre: bool,
         collect: str = "full",
         agg=None,
+        maintenance: str = "rebuild",
     ):
         self._session = session
         self.tick = tick
@@ -94,6 +95,10 @@ class TickHandle:
         self.submit_s = submit_s
         self.compile_s = compile_s
         self._rebuilt_pre = rebuilt_pre
+        # how the step maintained the index this tick ("rebuild" |
+        # "incremental" | "skip") — the session's scheduling decision,
+        # recorded for TickResult.maintenance
+        self._maintenance = maintenance
         # set by the session at finalize time
         self._finalized = False
         self._rebuilt_post = False
@@ -143,6 +148,7 @@ class TickHandle:
             shard_iterations=shard_it,
             collect_s=collect_s,
             aggregates=aggregates,
+            maintenance=self._maintenance,
         )
 
     def result(self, materialize: bool = True) -> TickResult:

@@ -231,6 +231,25 @@ class KnnSession:
             if spec.collect == "stats" else None
         )
         self._sink_state = None
+        # --- index-maintenance bookkeeping (DESIGN.md §15) ---
+        # True iff the positions buffer changed since the index was last
+        # refreshed from it; a clean buffer makes the reindex a semantic
+        # no-op (reindex is a pure function of the buffer), so the step can
+        # statically skip it — the dirty-flag fast path
+        self._positions_dirty = True
+        # union of object ids moved since the last refresh, sorted unique
+        # (delta batches are deduped); None = "unknown delta" — a snapshot
+        # ingest replaced the whole buffer, only a full refresh is safe
+        self._pending_ids: np.ndarray | None = None
+        # device-side batches of pre-update positions (gathered just before
+        # each delta scatter) plus, per pending id, the row of its FIRST
+        # touch inside their concatenation: the incremental reindex needs
+        # each moved object's position as of the last refresh to re-derive
+        # (and binary-search) its old sort key — kept on device, assembled
+        # by one gather at submit, so update_objects stays fully async
+        self._pending_old_batches: list = []
+        self._pending_old_rows = 0
+        self._pending_src: np.ndarray | None = None
 
     # ------------------------------------------------------------ state views
     @property
@@ -263,6 +282,12 @@ class KnnSession:
         if positions.ndim != 2 or positions.shape[1] != 2:
             raise ValueError(f"positions must be (N, 2), got {positions.shape}")
         self._positions = jnp.asarray(positions, jnp.float32)
+        # whole buffer replaced, delta unknown: only a full refresh is safe
+        self._positions_dirty = True
+        self._pending_ids = None
+        self._pending_old_batches = []
+        self._pending_old_rows = 0
+        self._pending_src = None
 
     def update_objects(self, ids, positions):
         """Delta ingest: scatter ``positions[i]`` to object ``ids[i]`` on device.
@@ -310,6 +335,14 @@ class KnnSession:
                 [positions, np.zeros((pad, 2), np.float32)]
             )
         ids_dev, pos_dev = jnp.asarray(ids), jnp.asarray(positions)
+        tracking = not (self._positions_dirty and self._pending_ids is None)
+        if tracking:
+            # positions BEFORE this batch's scatter, in the host-known
+            # (deduped, padded) id order — an id's first touch since the
+            # last refresh reads its as-of-refresh position, which is what
+            # the incremental reindex needs to locate its old sort key.
+            # Padding rows gather a clamped garbage row, never consumed.
+            old_batch = self._positions[ids_dev]
         if self.plan.object_axis_size > 1 and self._index is not None:
             # object-sharded plans: group the batch by owning shard (the
             # Morton-rank rule, DESIGN.md §12; under cost_balanced, the
@@ -323,6 +356,33 @@ class KnnSession:
                 self._obj_bounds,
             )
         self._positions = scatter_positions(self._positions, ids_dev, pos_dev)
+        # accumulate the delta set for the maintenance decision at submit:
+        # `ids` is unique by now (padding rows are >= n and excluded); union
+        # because the SAME object moving twice between submits is one moved
+        # row from the index's point of view
+        moved = ids[:m]
+        if tracking:
+            self._pending_old_batches.append(old_batch)
+            src_batch = self._pending_old_rows + np.arange(m, dtype=np.int64)
+            self._pending_old_rows += int(ids.shape[0])
+            if self._pending_ids is None:
+                order = np.argsort(moved)
+                self._pending_ids = moved[order]
+                self._pending_src = src_batch[order]
+            else:
+                # first touch wins for the old position (it is the one taken
+                # against the last refresh); the id set is a union because
+                # the same object moving twice is one moved row to the index
+                fresh = ~np.isin(moved, self._pending_ids)
+                merged = np.union1d(self._pending_ids, moved)
+                src = np.empty(merged.size, np.int64)
+                src[np.searchsorted(merged, self._pending_ids)] = (
+                    self._pending_src
+                )
+                src[np.searchsorted(merged, moved[fresh])] = src_batch[fresh]
+                self._pending_ids, self._pending_src = merged, src
+        # else: unknown delta (snapshot since last refresh) stays unknown
+        self._positions_dirty = True
 
     def object_shards(self, ids) -> np.ndarray:
         """Owning object shard per object id under the live plan + index.
@@ -417,6 +477,14 @@ class KnnSession:
         # partition — stale after a rebuild; ownership answers fall back to
         # the capacity rule until the next tick returns fresh boundaries
         self._obj_bounds = None
+        # the index was just refreshed from the live buffer: clean slate for
+        # the maintenance decision (build_index ≡ reindex_objects on pos/
+        # ids/codes/starts/pyramid, so the next clean tick may skip)
+        self._positions_dirty = False
+        self._pending_ids = None
+        self._pending_old_batches = []
+        self._pending_old_rows = 0
+        self._pending_src = None
 
     def _finalize_one(self, h: TickHandle):
         """Read back the tick's bookkeeping scalars and apply the drift policy.
@@ -480,6 +548,41 @@ class KnnSession:
         if qcost_dev is None or qcost_dev.shape[0] != qpos_dev.shape[0]:
             qcost_dev = jnp.zeros((qpos_dev.shape[0],), jnp.float32)
         spec = self.spec
+        # --- maintenance decision (DESIGN.md §15), made per tick, host-side:
+        # clean buffer -> "skip" (reindex would be a bitwise no-op);
+        # known small delta under an incremental spec -> "incremental";
+        # anything else (rebuild spec, snapshot ingest, churn over budget)
+        # -> full "rebuild" refresh.  Each mode is a static of the step, so
+        # every (shape, mode) pair is its own cached executable.
+        n = self.num_objects
+        delta_ids_dev = None
+        delta_old_pos_dev = None
+        if not self._positions_dirty:
+            mode = "skip"
+        elif (
+            spec.maintenance == "incremental"
+            and self._pending_ids is not None
+            and self._pending_ids.size <= spec.churn_budget * n
+        ):
+            mode = "incremental"
+            m = self._pending_ids.size
+            pad = pad_capacity(max(m, 1), spec.delta_pad) - m
+            delta_ids_dev = jnp.asarray(np.concatenate(
+                [self._pending_ids, np.full((pad,), n, np.int32)]
+            ))
+            # as-of-refresh positions of the pending ids: one gather over
+            # the captured pre-scatter batches (device-side, async)
+            sel = np.concatenate(
+                [self._pending_src, np.zeros((pad,), np.int64)]
+            ).astype(np.int32)
+            batches = self._pending_old_batches
+            cat = batches[0] if len(batches) == 1 else jnp.concatenate(batches)
+            delta_old_pos_dev = cat[jnp.asarray(sel)]
+        else:
+            # over-budget churn defers to the FULL stage-(ii) refresh (not
+            # build_index: the z_map stays put so the drift trigger fires
+            # identically under both maintenance policies)
+            mode = "rebuild"
         self._index, nn_idx, nn_dist, aux, should_rebuild = _tick_step(
             self._index,
             self._positions,
@@ -489,6 +592,8 @@ class KnnSession:
             jnp.float32(np.inf if self._work_at_build is None
                         else self._work_at_build),
             jnp.float32(spec.rebuild_factor),
+            delta_ids_dev,
+            delta_old_pos_dev,
             k=spec.k,
             window=spec.window,
             chunk=spec.chunk,
@@ -496,7 +601,16 @@ class KnnSession:
             max_iters=spec.max_iters,
             executor=self.executor,
             plan=self.plan,
+            maintenance=mode,
         )
+        # the index is now refreshed from this very buffer: clean until the
+        # next position change (the dispatched step reads the buffer as of
+        # dispatch; later update_objects scatter into a NEW buffer)
+        self._positions_dirty = False
+        self._pending_ids = None
+        self._pending_old_batches = []
+        self._pending_old_rows = 0
+        self._pending_src = None
         # thread the repeated-query feedback loop: next tick's boundaries
         # see this tick's measured per-query work (device arrays, async)
         self._qcost = aux.qcost_next
@@ -524,7 +638,8 @@ class KnnSession:
         # statics (th_quad/l_max ride in the index pytree's meta fields)
         key = (int(qpos_dev.shape[0]), self.num_objects, spec.k, spec.window,
                spec.chunk, spec.l_max, spec.th_quad, spec.max_iters,
-               self.executor, self.plan, spec.collect)
+               self.executor, self.plan, spec.collect, mode,
+               None if delta_ids_dev is None else int(delta_ids_dev.shape[0]))
         compile_s = submit_s if key not in _COMPILED_KEYS else 0.0
         _COMPILED_KEYS.add(key)
         h = TickHandle(
@@ -543,6 +658,7 @@ class KnnSession:
             rebuilt_pre=rebuilt_pre,
             collect=spec.collect,
             agg=agg,
+            maintenance=mode,
         )
         self._tick += 1
         self._pending.append(h)

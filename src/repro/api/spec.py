@@ -60,6 +60,15 @@ class ServiceSpec:
     # MERGE backend for the object-axis reduce ("dense_merge" | "fused_multi";
     # repro.kernels.merge_backend_names())
     merge: str = "dense_merge"
+    # index-maintenance policy ("rebuild" | "incremental";
+    # repro.core.ticks.MAINTENANCE_MODES, DESIGN.md §15): "incremental"
+    # refreshes the Morton order / pyramid with work proportional to the
+    # delta batch (recode + sort + splice of the moved rows only), bitwise-
+    # identical to the full per-tick "rebuild" refresh at every tick
+    maintenance: str = "rebuild"
+    # incremental only: moved-fraction of N (accumulated since the last full
+    # refresh) at which the session defers to one full reindex
+    churn_budget: float = 0.25
     max_iters: int = 100_000
     origin: tuple[float, float] = (0.0, 0.0)
     side: float = SIDE_DEFAULT
@@ -74,7 +83,8 @@ class ServiceSpec:
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
             partitioner=self.partitioner, precision=self.precision,
-            merge=self.merge,
+            merge=self.merge, maintenance=self.maintenance,
+            churn_budget=self.churn_budget,
         )
         if self.collect not in COLLECT_MODES:
             raise ValueError(
@@ -95,7 +105,8 @@ class ServiceSpec:
             rebuild_factor=self.rebuild_factor, region_pad=self.region_pad,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
             partitioner=self.partitioner, precision=self.precision,
-            merge=self.merge, max_iters=self.max_iters,
+            merge=self.merge, maintenance=self.maintenance,
+            churn_budget=self.churn_budget, max_iters=self.max_iters,
         )
 
     @classmethod
@@ -113,7 +124,9 @@ class ServiceSpec:
             chunk=cfg.chunk, rebuild_factor=cfg.rebuild_factor,
             region_pad=cfg.region_pad, backend=cfg.backend, plan=cfg.plan,
             mesh_shape=cfg.mesh_shape, partitioner=cfg.partitioner,
-            precision=cfg.precision, merge=cfg.merge, max_iters=cfg.max_iters,
+            precision=cfg.precision, merge=cfg.merge,
+            maintenance=cfg.maintenance, churn_budget=cfg.churn_budget,
+            max_iters=cfg.max_iters,
             origin=(float(origin[0]), float(origin[1])), side=float(side),
             delta_pad=delta_pad,
         )

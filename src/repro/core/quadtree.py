@@ -23,8 +23,21 @@ import jax
 import jax.numpy as jnp
 
 from . import morton
+from ..kernels.delta_splice import (
+    gather_splice,
+    searchsorted_pairs,
+    sparse_splice_plan,
+)
 
-__all__ = ["QuadtreeIndex", "build_index", "reindex_objects", "leaf_of_points"]
+__all__ = [
+    "QuadtreeIndex",
+    "build_index",
+    "reindex_objects",
+    "reindex_objects_delta",
+    "leaf_of_points",
+    "starts_from_pyramid",
+    "pyramid_delta",
+]
 
 
 @partial(
@@ -116,6 +129,52 @@ def _count_pyramid(codes: jnp.ndarray, l_max: int) -> jnp.ndarray:
     return jnp.concatenate(list(reversed(levels)))
 
 
+def starts_from_pyramid(pyramid: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Prefix offsets from the pyramid's fine level: ``starts[c] = # codes < c``.
+
+    Shared by every index-maintenance path (build / full reindex / delta
+    reindex) so that ``starts`` is always the same op over the same int32
+    counts — equal pyramids therefore give bitwise-equal offsets.
+    """
+    fine_counts = pyramid[pyramid_offset(l_max) :]
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
+    )
+
+
+def pyramid_delta(
+    pyramid: jnp.ndarray,
+    old_codes: jnp.ndarray,
+    new_codes: jnp.ndarray,
+    weight: jnp.ndarray,
+    l_max: int,
+) -> jnp.ndarray:
+    """Update the count pyramid for rows whose fine code changed.
+
+    Scatter-subtract ``weight`` at the old fine-level quadrant and
+    scatter-add it at the new one — Δ-sized scatters at the *fine level
+    only* — then rebuild the ``l_max`` coarser levels by 4-way reshape-sums
+    (the same derivation :func:`_count_pyramid` uses, O(4**l_max) adds
+    total).  ``weight`` is 1 for real delta rows, 0 for padding; codes at or
+    above ``4**l_max`` (the sentinel convention) fall outside the fine level
+    and are dropped.  Integer adds are exact and commute, so the result is
+    bitwise-equal to a from-scratch recount of the updated code set — the
+    incremental path's pyramid identity in DESIGN.md §15.  O(Δ + 4**l_max)
+    work versus the recount's O(N + 4**l_max), and no per-level scatter
+    chain (XLA scatters cost ~per-element; the reshape-sums vectorize).
+    """
+    fine = pyramid[pyramid_offset(l_max) :]
+    fine = fine.at[old_codes].add(-weight, mode="drop").at[new_codes].add(
+        weight, mode="drop"
+    )
+    levels = [fine]
+    cur = fine
+    for _ in range(l_max):
+        cur = cur.reshape(-1, 4).sum(axis=1)
+        levels.append(cur)
+    return jnp.concatenate(list(reversed(levels)))
+
+
 def _leaf_levels(pyramid: jnp.ndarray, l_max: int, th_quad: int) -> jnp.ndarray:
     """Leaf level per fine cell = number of split ancestors along its path.
 
@@ -160,10 +219,7 @@ def build_index(
     ids_s = order.astype(jnp.int32)
     pyramid = _count_pyramid(codes, l_max)
     leaf_level = _leaf_levels(pyramid, l_max, th_quad)
-    fine_counts = pyramid[pyramid_offset(l_max) :]
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
-    )
+    starts = starts_from_pyramid(pyramid, l_max)
     return QuadtreeIndex(
         origin=origin,
         side=side,
@@ -192,15 +248,129 @@ def reindex_objects(index: QuadtreeIndex, points: jnp.ndarray) -> QuadtreeIndex:
     codes = morton.morton_encode_points(points, index.origin, index.side, l_max)
     order = jnp.argsort(codes)
     pyramid = _count_pyramid(codes, l_max)
-    fine_counts = pyramid[pyramid_offset(l_max) :]
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
-    )
+    starts = starts_from_pyramid(pyramid, l_max)
     return dataclasses.replace(
         index,
         pos=points[order],
         ids=order.astype(jnp.int32),
         codes=codes[order],
+        starts=starts,
+        pyramid=pyramid,
+    )
+
+
+@jax.jit
+def reindex_objects_delta(
+    index: QuadtreeIndex,
+    points: jnp.ndarray,
+    delta_ids: jnp.ndarray,
+    delta_old_pos: jnp.ndarray,
+) -> QuadtreeIndex:
+    """Stage (ii) with work proportional to the delta, not to N.
+
+    Produces bitwise the same index as ``reindex_objects(index, points)``
+    when ``points`` differs from the indexed positions only at ``delta_ids``
+    (DESIGN.md §15 has the full argument):
+
+    * the canonical order is lexicographic ``(code, id)`` — a stable argsort
+      of id-indexed codes — so it can be reproduced by splicing the Δ moved
+      rows (the only sort, O(Δ log Δ) via a 2-key ``lax.sort``) into the
+      surviving rows of the old order.  The splice is the *sparse* plan of
+      the delta-splice kernel: moved slots are located by a
+      ``(old code, id)`` pair binary search against the existing sorted
+      keys (no O(N) inverse-rank scatter), and the merged order comes back
+      as gather sources, so no step issues an N-sized scatter —
+      kernels/delta_splice.py documents why that distinction carries the
+      whole speedup on XLA backends;
+    * the pyramid is int32 counts, so ±1 fine-level scatter-adds at the
+      old/new cells + reshape-sum rollup are exactly a recount
+      (:func:`pyramid_delta`);
+    * ``starts`` is the same :func:`starts_from_pyramid` op over that
+      pyramid; ``leaf_level`` (stage i) is untouched, exactly as in
+      ``reindex_objects``.
+
+    ``delta_ids`` must contain each object id at most once (the session
+    dedups keep-first before padding); out-of-range ids (the sentinel-N
+    padding convention of ``scatter_positions``) are ignored.
+    ``delta_old_pos`` row ``r`` must hold the position object
+    ``delta_ids[r]`` had when ``index`` was built — bitwise, as float32 —
+    so its old ``(code, id)`` key can be recomputed and found by search;
+    padding rows are arbitrary.  Cost: O(Δ log Δ) sort + O(Δ log N) search
+    + O(Δ) scatters + two O(N) cumsums and the O(N) output gathers.  When
+    ``(code, id)`` fits a packed int32 (the common case: it needs
+    ``4**l_max * (n+1) + n < 2**31``) the sort and search run over packed
+    single keys; otherwise the explicit pair formulation of
+    kernels/delta_splice.py takes over (x64 is disabled, so there is no
+    64-bit packed fallback).
+    """
+    n = index.n_objects
+    l_max = index.l_max
+    points = points.astype(jnp.float32)
+    ids = delta_ids.astype(jnp.int32)
+    p = ids.shape[0]
+    valid = ids < n
+    safe = jnp.where(valid, ids, 0)
+    sent_code = jnp.int32(4**l_max)  # > every real fine code
+    q_ids = jnp.where(valid, ids, n)
+    old_codes = jnp.where(
+        valid,
+        morton.morton_encode_points(
+            delta_old_pos.astype(jnp.float32), index.origin, index.side, l_max
+        ),
+        sent_code,
+    )
+    # run B: the moved rows, (code, id)-lexsorted — the only sort in the path
+    new_pos = points[safe]
+    new_codes = morton.morton_encode_points(new_pos, index.origin, index.side, l_max)
+    new_codes_m = jnp.where(valid, new_codes, sent_code)
+    arange_p = jnp.arange(p, dtype=jnp.int32)
+    if 4**l_max * (n + 1) + n < 2**31:
+        # (code, id) packs into one int32 (id < n+1 makes numeric order equal
+        # lexicographic order): a 1-key sort + plain searchsorted beat the
+        # pair formulation's 2-key sort + gather-per-iteration binary search.
+        mult = jnp.int32(n + 1)
+        pk_b, perm = jax.lax.sort(
+            (new_codes_m * mult + q_ids, arange_p), num_keys=1
+        )
+        codes_b = new_codes_m[perm]
+        ids_b = q_ids[perm]
+        # ONE fused search, side="right": the first half hits existing keys
+        # exactly (rank = slot + 1); the second ranks new keys for insertion.
+        res = jnp.searchsorted(
+            index.codes * mult + index.ids,
+            jnp.concatenate([old_codes * mult + q_ids, pk_b]),
+            side="right",
+        ).astype(jnp.int32)
+    else:
+        codes_b, ids_b, perm = jax.lax.sort(
+            (new_codes_m, q_ids, arange_p), num_keys=2
+        )
+        res = searchsorted_pairs(
+            index.codes,
+            index.ids,
+            jnp.concatenate([old_codes, codes_b]),
+            jnp.concatenate([q_ids, ids_b]),
+            side="right",
+        )
+    pos_b = new_pos[perm]
+    slots = jnp.where(valid, res[:p] - 1, n)
+    src_a, b_src = sparse_splice_plan(slots, res[p:], n)
+    codes_n = gather_splice(src_a, b_src, index.codes, codes_b)
+    ids_n = gather_splice(src_a, b_src, index.ids, ids_b)
+    pos_n = gather_splice(src_a, b_src, index.pos, pos_b)
+    pyramid = pyramid_delta(
+        index.pyramid,
+        old_codes,
+        new_codes_m,
+        valid.astype(jnp.int32),
+        l_max,
+    )
+    starts = starts_from_pyramid(pyramid, l_max)
+    return dataclasses.replace(
+        index,
+        pos=pos_n,
+        ids=ids_n,
+        codes=codes_n,
         starts=starts,
         pyramid=pyramid,
     )

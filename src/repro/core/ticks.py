@@ -65,21 +65,32 @@ import numpy as np
 from .balance import partitioner_names
 from .executor import QueryExecutor, available_backends, available_plans
 from .plan import ExecutionPlan
-from .quadtree import reindex_objects
+from .quadtree import reindex_objects, reindex_objects_delta
 
 __all__ = [
     "TickEngine",
     "TickResult",
     "EngineConfig",
+    "MAINTENANCE_MODES",
     "validate_engine_params",
     "scatter_positions",
     "object_shard_of",
     "route_delta",
 ]
 
+# Index-maintenance policies (DESIGN.md §15).  "rebuild" = the paper's
+# stage-(ii) full refresh every tick; "incremental" = delta recode + splice
+# with work proportional to churn, deferring to a full refresh when the
+# accumulated delta crosses ``churn_budget`` x N.  (The per-tick device step
+# additionally knows an internal "skip" mode — the dirty-flag fast path for
+# ticks with no position change — which is a session scheduling decision,
+# not a user-facing policy.)
+MAINTENANCE_MODES = ("rebuild", "incremental")
+
 
 def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None,
-                           partitioner=None, precision=None, merge=None):
+                           partitioner=None, precision=None, merge=None,
+                           maintenance=None, churn_budget=None):
     """Eager validation shared by ``EngineConfig`` and ``repro.api.ServiceSpec``.
 
     Raises ``ValueError`` with the full registry listing for unknown
@@ -119,6 +130,17 @@ def validate_engine_params(*, k, window, chunk, backend, plan, mesh_shape=None,
                 f"unknown merge backend {merge!r}; registered MERGE "
                 f"backends: {merge_backend_names()}"
             )
+    if maintenance is not None and maintenance not in MAINTENANCE_MODES:
+        raise ValueError(
+            f"unknown maintenance mode {maintenance!r}; one of "
+            f"{MAINTENANCE_MODES}"
+        )
+    if churn_budget is not None and not (0.0 < churn_budget <= 1.0):
+        raise ValueError(
+            f"churn_budget must be in (0, 1], got {churn_budget!r} "
+            "(fraction of N moved since the last full refresh at which the "
+            "incremental path defers to a full reindex)"
+        )
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     if window < 1:
@@ -175,6 +197,16 @@ class EngineConfig:
     # "dense_merge" = binary tree of pairwise kernels, "fused_multi" = one
     # multi-way kernel per query row — no HBM round-trip between rounds)
     merge: str = "dense_merge"
+    # index-maintenance policy (MAINTENANCE_MODES; DESIGN.md §15):
+    # "rebuild" = full stage-(ii) refresh every dirty tick; "incremental" =
+    # delta Morton recode + sorted-run splice + pyramid scatter-add for the
+    # moved rows only, bitwise-identical to "rebuild" at every tick
+    maintenance: str = "rebuild"
+    # incremental only: fraction of N moved since the last full refresh at
+    # which the session defers to a full reindex (generalizes the spirit of
+    # rebuild_factor to stage (ii); the crossover where a full O(N log N)
+    # sort beats delta accounting)
+    churn_budget: float = 0.25
     max_iters: int = 100_000
 
     def __post_init__(self):
@@ -182,7 +214,8 @@ class EngineConfig:
             k=self.k, window=self.window, chunk=self.chunk,
             backend=self.backend, plan=self.plan, mesh_shape=self.mesh_shape,
             partitioner=self.partitioner, precision=self.precision,
-            merge=self.merge,
+            merge=self.merge, maintenance=self.maintenance,
+            churn_budget=self.churn_budget,
         )
 
 
@@ -209,12 +242,16 @@ class TickResult:
     # on-device aggregates (repro.api.sink.TickAggregates) under
     # collect="stats"; None under "full"/"none"
     aggregates: object | None = None
+    # how THIS tick's step maintained the index: "rebuild" (full stage-(ii)
+    # refresh), "incremental" (delta splice), or "skip" (dirty-flag fast
+    # path: nothing moved since the last refresh, reindex elided)
+    maintenance: str = "rebuild"
 
 
 @partial(
     jax.jit,
     static_argnames=("k", "window", "chunk", "max_nav", "max_iters",
-                     "executor", "plan"),
+                     "executor", "plan", "maintenance"),
 )
 def _tick_step(
     index,
@@ -224,6 +261,8 @@ def _tick_step(
     qcost,
     work_at_build,
     rebuild_factor,
+    delta_ids,
+    delta_old_pos,
     *,
     k: int,
     window: int,
@@ -232,22 +271,39 @@ def _tick_step(
     max_iters: int,
     executor: QueryExecutor,
     plan: ExecutionPlan,
+    maintenance: str = "rebuild",
 ):
     """(index, P_tau, Q_tau) -> (index', R_tau, aux, should_rebuild).
 
-    One fused device program per tick: reindex + the plan's query sweep +
-    drift check.  The step is built *per plan* (a static argument, like the
-    executor): under the ``single`` plan the sweep is the chunked one-device
-    ``lax.map``; under ``sharded`` it is the ``shard_map`` fan-out over the
-    ``("query",)`` mesh with the refreshed index replicated; the gathered
-    per-shard counters (``aux.shard_candidates``) sum to whole-tick volume,
-    which is what the drift comparison below reads.  ``qcost`` is the
-    per-query cost EMA the session threads across ticks (zeros = cold); the
-    cost-balanced partitioner turns it into next tick's shard boundaries.
-    On ticks whose index was just built from these exact positions the
-    reindex is a semantic no-op; running it anyway keeps ONE compiled program
-    (a static skip flag would double the compile for a microseconds-scale
-    saving).
+    One fused device program per tick: index maintenance + the plan's query
+    sweep + drift check.  The step is built *per plan* (a static argument,
+    like the executor): under the ``single`` plan the sweep is the chunked
+    one-device ``lax.map``; under ``sharded`` it is the ``shard_map``
+    fan-out over the ``("query",)`` mesh with the refreshed index
+    replicated; the gathered per-shard counters (``aux.shard_candidates``)
+    sum to whole-tick volume, which is what the drift comparison below
+    reads.  ``qcost`` is the per-query cost EMA the session threads across
+    ticks (zeros = cold); the cost-balanced partitioner turns it into next
+    tick's shard boundaries.
+
+    ``maintenance`` selects the stage-(ii) refresh, statically — one
+    compiled program per (shape, mode) pair (DESIGN.md §15):
+
+    * ``"rebuild"``: full ``reindex_objects`` — recode + argsort + recount
+      over all N rows; ``delta_ids``/``delta_old_pos`` must be None (not
+      baked into a program that ignores them).
+    * ``"incremental"``: ``reindex_objects_delta`` — recode/sort/splice only
+      the ``delta_ids`` rows (sentinel-N padded, deduped by the session;
+      ``delta_old_pos`` carries their positions as of the last refresh so
+      the old keys can be located by search), bitwise-equal to "rebuild" by
+      the splice stability argument.
+    * ``"skip"``: the dirty-flag fast path — positions are unchanged since
+      the index was refreshed from this very buffer, so the reindex (a
+      semantic no-op, since ``reindex_objects`` is a pure function of the
+      positions buffer) is elided entirely; ``delta_ids`` must be None.
+      Before the seam existed the no-op reindex ran anyway to keep one
+      compiled program; now the session tracks dirtiness and each mode is
+      its own cached executable, so clean ticks pay zero reindex.
 
     The step deliberately does NOT donate the incoming index: donated
     arguments make the host-side dispatch *synchronous* on this runtime (the
@@ -262,7 +318,12 @@ def _tick_step(
     by the session via snapshot upload, delta scatter, or the persistent
     padded query registry); this step never touches the host boundary.
     """
-    index = reindex_objects(index, positions)
+    if maintenance == "rebuild":
+        index = reindex_objects(index, positions)
+    elif maintenance == "incremental":
+        index = reindex_objects_delta(index, positions, delta_ids, delta_old_pos)
+    elif maintenance != "skip":
+        raise ValueError(f"unknown step maintenance mode {maintenance!r}")
     nn_idx, nn_dist, aux = plan.run(
         index,
         qpos,

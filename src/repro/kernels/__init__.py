@@ -5,6 +5,13 @@ BlockSpec kernel, ``ops.py`` the jit'd wrappers + the SCAN/MERGE backend
 registries, ``ref.py`` the pure-jnp oracles used by the allclose sweeps in
 tests/.
 """
+from .delta_splice import (
+    gather_splice,
+    merge_ranks,
+    searchsorted_pairs,
+    sparse_splice_plan,
+    splice_payload,
+)
 from .ops import (
     bucket_kselect_op,
     fused_scan_merge_op,
@@ -50,4 +57,9 @@ __all__ = [
     "register_merge_backend",
     "merge_backend_names",
     "tree_merge_lists",
+    "merge_ranks",
+    "searchsorted_pairs",
+    "splice_payload",
+    "sparse_splice_plan",
+    "gather_splice",
 ]

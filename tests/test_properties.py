@@ -237,6 +237,83 @@ def test_fewer_objects_than_k_all_plans(seed, n, dup_every):
         np.testing.assert_array_equal(dd, ref[1], err_msg=f"{plan}/{part}")
 
 
+@settings(max_examples=3, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),  # seed
+    st.integers(min_value=0, max_value=2),       # family
+    st.integers(min_value=1, max_value=4),       # dup_every
+    st.floats(min_value=1.2, max_value=3.5),     # zipf_a
+)
+def test_maintenance_axis_bit_identical(seed, family, dup_every, zipf_a):
+    """maintenance="incremental" == "rebuild", bitwise, at EVERY tick across
+    the plan × partitioner grid — the fifth harness axis (DESIGN.md §15).
+
+    Two sessions consume one motion script in lockstep.  The script is built
+    to hit the seam's interesting transitions: tick 0 serves straight off
+    the fresh build (both sessions "skip"); small-delta ticks splice
+    incrementally, with the moved rows TELEPORTED across the region so their
+    Morton ranks — and under ``object_sharded``/``hybrid`` their owning
+    shards — change (boundary-crossing migration rides the ordinary splice,
+    no special casing); a clean tick exercises the dirty-flag skip; and one
+    over-budget tick (60% of N > churn_budget=0.25) forces the mid-run
+    deferred FULL refresh.  ``rebuild_factor`` is set high so the drift
+    trigger never fires and the mode schedule is deterministic; drift ×
+    maintenance interplay is pinned separately in tests/test_maintenance.py.
+
+    Asserted bitwise per tick: the (Q, k) neighbour lists AND every index
+    array — order (pos/ids/codes), intervals (starts), pyramid, z_map
+    (leaf_level).  Shapes are held fixed so the jit cache is shared across
+    examples and grid cells.
+    """
+    from repro.api import KnnSession, ServiceSpec
+
+    n, nq, k = 128, 16, 4
+    pts0 = _cloud(seed, n, family, dup_every, zipf_a)
+    qpos, qid = _queries(pts0, nq, seed)
+    rng = np.random.default_rng(seed + 2)
+    # motion script: rows moved before each tick (None = clean tick)
+    script = [None, 12, None, int(n * 0.6), 12]
+    want_modes = ["skip", "incremental", "skip", "rebuild", "incremental"]
+    for plan, mesh, part in PLAN_GRID:
+        sessions = {}
+        for maint in ("rebuild", "incremental"):
+            spec = ServiceSpec(
+                k=k, window=16, chunk=32, l_max=5, th_quad=8, side=SIDE,
+                plan=plan, mesh_shape=mesh, partitioner=part,
+                maintenance=maint, churn_budget=0.25, delta_pad=16,
+                rebuild_factor=1e9,
+            )
+            s = KnnSession(spec)
+            s.ingest_objects(pts0)
+            s.register_queries(qpos, qid)
+            sessions[maint] = s
+        pts = pts0.copy()
+        move_rng = np.random.default_rng(seed + 3)
+        for t, mv in enumerate(script):
+            if mv:
+                ids = move_rng.choice(n, mv, replace=False)
+                # teleport: uniform over the whole region ⇒ Morton ranks and
+                # (for the object-axis plans) shard ownership change
+                new = move_rng.uniform(0, SIDE, (mv, 2)).astype(np.float32)
+                pts[ids] = new
+                for s in sessions.values():
+                    s.update_objects(ids, new)
+            ra = sessions["rebuild"].submit().result()
+            rb = sessions["incremental"].submit().result()
+            assert rb.maintenance == want_modes[t], (plan, part, t)
+            tag = f"{plan}/{part}/tick{t}"
+            np.testing.assert_array_equal(ra.nn_idx, rb.nn_idx, err_msg=tag)
+            np.testing.assert_array_equal(ra.nn_dist, rb.nn_dist, err_msg=tag)
+            ia = sessions["rebuild"].index
+            ib = sessions["incremental"].index
+            for f in ("pos", "ids", "codes", "starts", "pyramid",
+                      "leaf_level"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ia, f)), np.asarray(getattr(ib, f)),
+                    err_msg=f"{tag}/{f}",
+                )
+
+
 @pytest.mark.parametrize("r", [2, 3, 8])
 def test_pipeline_r_way_partition_composes(r):
     """The plan-level composition law WITHOUT a mesh: R independent local
