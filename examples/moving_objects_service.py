@@ -36,7 +36,12 @@ to a full rebuild).
       [--ingest snapshot|delta] [--overlap] [--churn F] \
       [--maintenance rebuild|incremental] \
       [--precision fp32|mixed] [--merge dense_merge|fused_multi] \
-      [--collect full|stats|none]
+      [--collect full|stats|none] [--tenants N]
+
+``--tenants N`` (N > 1) serves the same workload through the multi-tenant
+``repro.serve.KnnServer`` instead of a solo session: the query batch splits
+round-robin across N tenants sharing ONE tick program, and each tick's
+object delta arrives via the next tenant in turn (DESIGN.md §16).
 
 ``--devices D`` (CPU) forces D host devices via XLA_FLAGS *before* jax
 initializes, so the mesh plans run on a real D-device mesh without
@@ -110,6 +115,12 @@ def _parse_args():
                     help="result delivery: full (Q,k) lists, on-device "
                          "ResultSink aggregates only (stats), or nothing "
                          "(none) — DESIGN.md §14")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="serve N tenants through ONE shared KnnServer tick "
+                         "program (repro.serve, DESIGN.md §16): the query "
+                         "batch splits round-robin across tenants and each "
+                         "tick's object delta is fed by the next tenant in "
+                         "turn; 1 (default) = the solo KnnSession path")
     return ap.parse_args()
 
 
@@ -150,6 +161,9 @@ def main():
                            collect=args.collect)
     except ValueError as e:  # eager validation lists the registries
         raise SystemExit(str(e))
+
+    if args.tenants > 1:
+        return _serve_tenants(args, spec)
 
     session = KnnSession(spec)
     workload = make_workload(args.objects, args.distribution, seed=0)
@@ -233,6 +247,101 @@ def main():
           f"[{session.plan.describe()}]")
     print("(the paper's GPU pipeline is the TPU dry-run target; CPU numbers "
           "exercise the identical program)")
+
+
+def _serve_tenants(args, spec):
+    """The --tenants N path: one shared KnnServer tick for every tenant.
+
+    The query batch splits round-robin across tenants (tenant *i* owns rows
+    ``i::N``), every tenant observes the SAME moving-object world, and each
+    tick's object delta is fed by the next tenant in round-robin turn — the
+    serving-layer shape of DESIGN.md §16.  Per-tick hit rate shows how much
+    device work the dedup + epoch-keyed cache saved (0 while every tick
+    moves objects: motion bumps the epoch; try --churn with some no-motion
+    ticks, or overlapping tenant queries, to see cache hits).
+    """
+    import numpy as np
+
+    from repro.data import make_workload
+    from repro.serve import KnnServer
+
+    server = KnnServer(spec)
+    workload = make_workload(args.objects, args.distribution, seed=0)
+    T = args.tenants
+
+    print(f"serving {args.objects} objects x {args.ticks} ticks "
+          f"across {T} tenants ({args.distribution}, k={args.k}, "
+          f"ingest={args.ingest}, overlap={args.overlap}, "
+          f"collect={args.collect})")
+
+    server.ingest_objects(workload.positions())
+    cur = np.asarray(workload.positions(), np.float32).copy()
+    churn_rng = np.random.default_rng(1)
+    qpos, qid = workload.query_batch(1.0)
+    tenants, groups = [], []
+    for i in range(T):
+        t = server.admit(f"tenant-{i}")
+        tenants.append(t)
+        groups.append(t.register_queries(qpos[i::T], qid[i::T]))
+    print(server.describe())
+
+    rounds, pending = [], None
+    last = time.perf_counter()
+
+    def collect(st):
+        res = st.result()
+        nonlocal last
+        now = time.perf_counter()
+        rounds.append(now - last)
+        last = now
+        extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
+        print(f"tick {res.tick:2d}: {rounds[-1] * 1e3:7.1f} ms "
+              f"rows={res.rows_total} computed={res.rows_computed} "
+              f"hit={res.hit_rate:.2f} epoch={res.epoch}"
+              f"{' REBUILT' if res.rebuilt else ''}{extra}")
+        # each tenant's rows stay addressable (and bit-identical to a solo
+        # session's — the §16 contract); touch one to keep the path honest
+        server_rows = st.result_for(groups[res.tick % T])
+        assert server_rows[0].shape[0] == groups[res.tick % T].count
+
+    for t in range(args.ticks):
+        if t > 0:
+            workload.advance()
+            new = np.asarray(workload.positions(), np.float32)
+            if args.churn < 1.0:
+                d = max(1, int(round(args.objects * args.churn)))
+                ids = churn_rng.choice(args.objects, d,
+                                       replace=False).astype(np.int32)
+                cur[ids] = new[ids]
+            else:
+                ids, cur = np.arange(args.objects, dtype=np.int32), new.copy()
+            if args.ingest == "delta":
+                # round-robin: THIS tick's observations arrive via tenant t%T
+                tenants[t % T].update_objects(ids, cur[ids])
+            else:
+                server.ingest_objects(cur)
+            newq = workload.query_batch(1.0)[0]
+            for i in range(T):
+                tenants[i].update_queries(groups[i], newq[i::T])
+        handle = server.submit()
+        if pending is not None:
+            collect(pending)
+        if args.overlap:
+            pending = handle
+        else:
+            collect(handle)
+            pending = None
+    if pending is not None:
+        collect(pending)
+
+    steady = rounds[1:-1] if (args.overlap and len(rounds) > 2) else rounds[1:]
+    served = server.rows_served
+    print(f"\nsteady state: {np.median(steady) * 1e3:.1f} ms/tick, "
+          f"{T} tenants, {served} rows served, "
+          f"{server.rows_computed} computed "
+          f"(lifetime hit rate "
+          f"{1 - server.rows_computed / max(served, 1):.2f}) "
+          f"[{server.session.plan.describe()}]")
 
 
 if __name__ == "__main__":

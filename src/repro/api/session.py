@@ -222,6 +222,12 @@ class KnnSession:
         # object_shards follow the live partition under cost_balanced;
         # cleared on drift rebuild (the Morton ranks it indexes change)
         self._obj_bounds = None
+        # optional per-query fairness weights on the boundary-seeding cost
+        # (set_query_cost_weights; the serving layer's tenant fair share,
+        # DESIGN.md §16) — host mirror + a cached padded device staging
+        self._qweight_host: np.ndarray | None = None
+        self._qweight_ver = 0
+        self._qweight_staged = None  # (ver, padded_len, device array)
         # on-device result consumer (DESIGN.md §14): under collect="stats"
         # submit() feeds each tick's padded (Qp, k) outputs straight into the
         # jitted sink update — asynchronously, right behind the tick step —
@@ -462,6 +468,35 @@ class KnnSession:
         """
         self._registry.replace_all(qpos, qid)
 
+    def set_query_cost_weights(self, weights):
+        """Per-query multipliers on the boundary-seeding cost (or None).
+
+        ``weights`` is (query_count,) f32, aligned with the registry's
+        current row order; the serving layer sets the tenant-fair weights
+        here (``core.balance.tenant_fair_weights``) so no tenant's query
+        volume buys it outsized influence on the cost-balanced shard
+        boundaries.  Weights scale the boundary seed ONLY — boundaries move
+        shard ownership, never results (DESIGN.md §13), so this cannot
+        change bits on any plan.  Pass None to clear.  Weights must be
+        re-set after any registry row-set change (validated at submit).
+        """
+        if weights is None:
+            self._qweight_host = None
+        else:
+            w = np.asarray(weights, np.float32).reshape(-1)
+            if w.shape[0] != self._registry.nq:
+                raise ValueError(
+                    f"set_query_cost_weights: {w.shape[0]} weights for a "
+                    f"{self._registry.nq}-row registry"
+                )
+            if w.size and not (np.isfinite(w).all() and (w > 0).all()):
+                raise ValueError(
+                    "set_query_cost_weights: weights must be finite and > 0"
+                )
+            self._qweight_host = w.copy()
+        self._qweight_ver += 1
+        self._qweight_staged = None
+
     # ------------------------------------------------------------ serving
     def _build(self):
         """(Re)build the space partition from the current device positions."""
@@ -515,6 +550,17 @@ class KnnSession:
             if h is target:
                 break
 
+    def finalize_pending(self):
+        """Apply the drift policy of every still-pending tick, now.
+
+        Blocks only on each pending tick's two bookkeeping scalars (the big
+        result arrays stay on device).  ``submit()`` does this implicitly;
+        the serving layer (``repro.serve``) calls it explicitly so a
+        drift-rebuild decision is *observable* (``TickHandle`` bookkeeping)
+        before it consults its epoch-keyed result cache.
+        """
+        self._finalize_through()
+
     def submit(self) -> TickHandle:
         """Dispatch one tick against the current object + query state.
 
@@ -547,6 +593,27 @@ class KnnSession:
         qcost_dev = self._qcost
         if qcost_dev is None or qcost_dev.shape[0] != qpos_dev.shape[0]:
             qcost_dev = jnp.zeros((qpos_dev.shape[0],), jnp.float32)
+        qweight_dev = None
+        if self._qweight_host is not None:
+            if self._qweight_host.shape[0] != nq:
+                raise RuntimeError(
+                    "query cost weights are stale: the registry row set "
+                    "changed since set_query_cost_weights (re-set or clear)"
+                )
+            cap = int(qpos_dev.shape[0])
+            st = self._qweight_staged
+            if st is None or st[0] != self._qweight_ver or st[1] != cap:
+                # padding rows clone the last active query (pad_queries), so
+                # they clone its weight too — pure consistency; padding can
+                # only shift boundaries, never results
+                w = self._qweight_host
+                w_p = np.concatenate(
+                    [w, np.full((cap - nq,), w[-1], np.float32)]
+                )
+                self._qweight_staged = (
+                    self._qweight_ver, cap, jnp.asarray(w_p, jnp.float32)
+                )
+            qweight_dev = self._qweight_staged[2]
         spec = self.spec
         # --- maintenance decision (DESIGN.md §15), made per tick, host-side:
         # clean buffer -> "skip" (reindex would be a bitwise no-op);
@@ -594,6 +661,7 @@ class KnnSession:
             jnp.float32(spec.rebuild_factor),
             delta_ids_dev,
             delta_old_pos_dev,
+            qweight_dev,
             k=spec.k,
             window=spec.window,
             chunk=spec.chunk,
@@ -639,7 +707,8 @@ class KnnSession:
         key = (int(qpos_dev.shape[0]), self.num_objects, spec.k, spec.window,
                spec.chunk, spec.l_max, spec.th_quad, spec.max_iters,
                self.executor, self.plan, spec.collect, mode,
-               None if delta_ids_dev is None else int(delta_ids_dev.shape[0]))
+               None if delta_ids_dev is None else int(delta_ids_dev.shape[0]),
+               qweight_dev is not None)
         compile_s = submit_s if key not in _COMPILED_KEYS else 0.0
         _COMPILED_KEYS.add(key)
         h = TickHandle(

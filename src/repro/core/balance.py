@@ -68,6 +68,7 @@ __all__ = [
     "resolve_partitioner",
     "partitioner_names",
     "straggler_gap",
+    "tenant_fair_weights",
 ]
 
 
@@ -137,6 +138,32 @@ def straggler_gap(shard_work) -> float:
     w = np.asarray(shard_work, np.float64)
     mean = w.mean()
     return float(w.max() / mean) if mean > 0 else 1.0
+
+
+def tenant_fair_weights(tenant_ids) -> "jnp.ndarray":
+    """(R,) f32 per-row fairness weights from per-row tenant ids.
+
+    The serving layer (``repro.serve``) coalesces many tenants' queries into
+    one registry; under the ``cost_balanced`` partitioner the boundary seed
+    is a per-query *cost*, so a tenant registering 10x more queries would
+    command 10x the boundary-seeding influence.  This helper computes the
+    fair-share correction: every row of tenant *t* gets weight
+    ``1 / count(t)``, so each tenant's total influence on the boundary seed
+    is identical regardless of how many rows it registered.  The weights
+    multiply the cost seed (``core.plan`` threads them through as
+    ``qweight``); only their *ratios* matter to ``balanced_boundaries``,
+    and — because boundaries only move shard ownership, never results
+    (DESIGN.md §13) — they can never change bits.
+
+    Host-side numpy (runs at registration time, not in the tick step).
+    """
+    import numpy as np
+
+    tid = np.asarray(tenant_ids, np.int64).reshape(-1)
+    if tid.size == 0:
+        return np.zeros((0,), np.float32)
+    _, inv, counts = np.unique(tid, return_inverse=True, return_counts=True)
+    return (1.0 / counts[inv]).astype(np.float32)
 
 
 class Partitioner:

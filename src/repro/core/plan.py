@@ -580,14 +580,19 @@ class ExecutionPlan:
         raise NotImplementedError
 
     def run(self, index: QuadtreeIndex, qpos, qid, qcost, *, k, window,
-            chunk, max_nav, max_iters, executor):
+            chunk, max_nav, max_iters, executor, qweight=None):
         """Trace-level tick sweep: (index, padded Q) -> (idx, dist, aux).
 
         ``qpos.shape[0]`` must be a whole multiple of ``pad_multiple(chunk)``;
         ``qcost`` is the (Q,) per-query cost EMA in the caller's row order
         (zeros = no history; the count-pyramid estimate seeds instead).
-        Results come back in the caller's query order, distances euclidean;
-        ``aux`` is the :class:`PlanAux` record.
+        ``qweight`` is an optional (Q,) f32 multiplier on the boundary-seeding
+        cost (the serving layer's tenant-fairness weights,
+        ``core.balance.tenant_fair_weights``); it scales *influence on shard
+        boundaries only* — plans that never split the query axis ignore it,
+        and because boundaries only move shard ownership (DESIGN.md §13) it
+        can never change results.  Results come back in the caller's query
+        order, distances euclidean; ``aux`` is the :class:`PlanAux` record.
         """
         raise NotImplementedError
 
@@ -612,7 +617,8 @@ class SinglePlan(ExecutionPlan):
         return chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor):
+            max_iters, executor, qweight=None):
+        del qweight  # no query-axis split: fairness weights have no seam here
         order, inv = _sort_unsort(index, qpos)
         idx_s, d2_s, stats, cq_s = _chunked_sweep(
             index, qpos[order], qid[order], k=k, window=window, chunk=chunk,
@@ -660,7 +666,7 @@ class ShardedPlan(ExecutionPlan):
         return self.num_devices * chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor):
+            max_iters, executor, qweight=None):
         from jax.sharding import PartitionSpec as P
 
         mesh = make_query_mesh(self.num_devices)
@@ -682,6 +688,10 @@ class ShardedPlan(ExecutionPlan):
         est_s = _query_cost_estimate(index, qpos_s, window)
         prev_s = qcost[order]
         cost_s = jnp.where(prev_s > 0, prev_s, est_s)
+        if qweight is not None:
+            # tenant-fair boundary seeding: weights scale each query's
+            # influence on the split, never its results (DESIGN.md §16)
+            cost_s = cost_s * qweight[order]
         bounds = self.partitioner.query_boundaries(
             cost_s.reshape(n_chunks, chunk).sum(axis=1), self.num_devices
         )
@@ -770,7 +780,8 @@ class ObjectShardedPlan(ExecutionPlan):
         return chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor):
+            max_iters, executor, qweight=None):
+        del qweight  # queries replicated, not split: no boundary to seed
         from jax.sharding import PartitionSpec as P
 
         mesh = make_object_mesh(self.num_devices)
@@ -875,7 +886,7 @@ class HybridPlan(ExecutionPlan):
         return self.query_devices * chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor):
+            max_iters, executor, qweight=None):
         from jax.sharding import PartitionSpec as P
 
         qd, od = self.query_devices, self.object_devices
@@ -895,6 +906,8 @@ class HybridPlan(ExecutionPlan):
         est_s = _query_cost_estimate(index, qpos_s, window)
         prev_s = qcost[order]
         cost_s = jnp.where(prev_s > 0, prev_s, est_s)
+        if qweight is not None:
+            cost_s = cost_s * qweight[order]
         bq = self.partitioner.query_boundaries(
             cost_s.reshape(n_chunks, chunk).sum(axis=1), qd
         )
@@ -1072,6 +1085,7 @@ def run_plan_device(
     qpos: jnp.ndarray,
     qid: jnp.ndarray,
     qcost: jnp.ndarray | None = None,
+    qweight: jnp.ndarray | None = None,
     *,
     k: int,
     window: int,
@@ -1088,7 +1102,10 @@ def run_plan_device(
     keyed by chunk count per shard, not by the raw query count — variable
     per-tick batch sizes reuse the same executable.  ``qcost`` is the (Q,)
     per-query cost EMA (None/zeros = no history; the serving session threads
-    ``aux.qcost_next`` back in).
+    ``aux.qcost_next`` back in).  ``qweight`` is the optional (Q,) fairness
+    multiplier on the boundary seed (None = unweighted; see
+    :meth:`ExecutionPlan.run`) — None is a valid pytree leaf-set, so sessions
+    that never set weights compile the exact same program as before.
 
     Returns (nn_idx (Q,k) i32, nn_dist (Q,k) f32 euclidean, aux
     :class:`PlanAux`) in the caller's query order (padding rows come back in
@@ -1109,6 +1126,7 @@ def run_plan_device(
         max_nav=max_nav,
         max_iters=max_iters,
         executor=executor,
+        qweight=None if qweight is None else qweight.astype(jnp.float32),
     )
 
 

@@ -263,6 +263,7 @@ def _tick_step(
     rebuild_factor,
     delta_ids,
     delta_old_pos,
+    qweight=None,
     *,
     k: int,
     window: int,
@@ -284,7 +285,10 @@ def _tick_step(
     sum to whole-tick volume, which is what the drift comparison below
     reads.  ``qcost`` is the per-query cost EMA the session threads across
     ticks (zeros = cold); the cost-balanced partitioner turns it into next
-    tick's shard boundaries.
+    tick's shard boundaries.  ``qweight`` is the optional (Q,) tenant-fair
+    multiplier on that boundary seed (None = unweighted — and None being a
+    valid pytree, sessions that never set weights hit the same compiled
+    programs as before the seam existed).
 
     ``maintenance`` selects the stage-(ii) refresh, statically — one
     compiled program per (shape, mode) pair (DESIGN.md §15):
@@ -335,6 +339,7 @@ def _tick_step(
         max_nav=max_nav,
         max_iters=max_iters,
         executor=executor,
+        qweight=qweight,
     )
     should_rebuild = aux.stats.candidates > rebuild_factor * work_at_build
     return index, nn_idx, nn_dist, aux, should_rebuild

@@ -39,11 +39,12 @@ from repro.models import (
 
 
 def serve_knn(args) -> int:
-    session = KnnSession(
-        ServiceSpec(k=args.k, th_quad=args.th_quad, l_max=args.l_max,
-                    chunk=args.chunk, plan=args.plan,
-                    partitioner=args.partitioner)
-    )
+    spec = ServiceSpec(k=args.k, th_quad=args.th_quad, l_max=args.l_max,
+                       chunk=args.chunk, plan=args.plan,
+                       partitioner=args.partitioner, collect=args.collect)
+    if args.tenants > 1:
+        return serve_knn_tenants(args, spec)
+    session = KnnSession(spec)
     w = make_workload(args.objects, args.distribution, seed=args.seed)
     tput = []
 
@@ -73,6 +74,49 @@ def serve_knn(args) -> int:
         res = session.submit().result()
         on_tick(res, time.time() - t0 - res.compile_s)
     print(f"[knn] steady-state throughput: {np.median(tput[1:]):.0f} queries/s")
+    return 0
+
+
+def serve_knn_tenants(args, spec) -> int:
+    """The server entrypoint: N tenants coalesced into one shared tick program.
+
+    Queries split round-robin across tenants; the whole-population delta of
+    each tick is fed by the next tenant in turn (round-robin ingest), so
+    every tenant exercises the shared-world path (DESIGN.md §16).
+    """
+    from repro.serve import KnnServer
+
+    server = KnnServer(spec)
+    w = make_workload(args.objects, args.distribution, seed=args.seed)
+    T = args.tenants
+    server.ingest_objects(w.positions())
+    qpos, qid = w.query_batch(1.0)
+    tenants = [server.admit(f"tenant-{i}") for i in range(T)]
+    groups = [t.register_queries(qpos[i::T], qid[i::T])
+              for i, t in enumerate(tenants)]
+    all_ids = np.arange(args.objects, dtype=np.int32)
+    print(f"[knn] {server.describe()}")
+    walls = []
+    for t in range(args.ticks):
+        t0 = time.time()
+        if t > 0:
+            w.advance()
+            cur = np.asarray(w.positions(), np.float32)
+            tenants[t % T].update_objects(all_ids, cur)
+            newq = w.query_batch(1.0)[0]
+            for i, tn in enumerate(tenants):
+                tn.update_queries(groups[i], newq[i::T])
+        res = server.submit().result()
+        wall = time.time() - t0 - res.compile_s
+        walls.append(wall)
+        print(f"[knn] tick {res.tick}: {wall * 1e3:.1f} ms, "
+              f"rows={res.rows_total} computed={res.rows_computed} "
+              f"hit={res.hit_rate:.2f} epoch={res.epoch} "
+              f"rebuilt={res.rebuilt}", flush=True)
+    lifetime = 1 - server.rows_computed / max(server.rows_served, 1)
+    print(f"[knn] {T} tenants steady-state: "
+          f"{np.median(walls[1:]) * 1e3:.1f} ms/tick, lifetime hit rate "
+          f"{lifetime:.2f}")
     return 0
 
 
@@ -141,6 +185,10 @@ def main(argv=None) -> int:
     k.add_argument("--distribution", default="uniform")
     k.add_argument("--plan", default="single")
     k.add_argument("--partitioner", default="equal")
+    k.add_argument("--collect", default="full")
+    k.add_argument("--tenants", type=int, default=1,
+                   help="serve N tenants through one shared KnnServer tick "
+                        "program (repro.serve); 1 = solo KnnSession")
     k.add_argument("--seed", type=int, default=0)
     m = sub.add_parser("lm")
     m.add_argument("--arch", default="rwkv6_3b", choices=list(ARCH_IDS))

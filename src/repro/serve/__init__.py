@@ -1,0 +1,44 @@
+"""repro.serve — the multi-tenant serving layer above :class:`repro.api.KnnSession`.
+
+One :class:`KnnServer` admits many tenant sessions and coalesces their
+repeated k-NN queries into ONE shared tick program on one device mesh:
+tenant-tagged rows in a unified registry, deduplicated by exact query
+geometry, quota-checked at registration, fairness-weighted under the
+cost-balanced partitioner, and replayed from an epoch-keyed result cache
+when the object world has not moved.  Per-tenant results are bitwise
+identical to what a solo session would have produced (DESIGN.md §16).
+
+    spec = ServiceSpec(k=8, side=1000.0, plan="sharded", mesh_shape=8)
+    server = KnnServer(spec)
+    server.ingest_objects(positions)          # ONE shared world
+    alice = server.admit("alice", quota=512)
+    bob = server.admit("bob")
+    qa = alice.register_queries(alice_qpos)
+    qb = bob.register_queries(bob_qpos)
+    bob.update_objects(ids, moved)            # bumps the cache epoch
+    tickres = server.submit()                 # one device tick for everyone
+    ii, dd, qids = tickres.result_for(qa)
+"""
+from .cache import CacheStats, ResultCache
+from .registry import ComputeView, TenantRegistry
+from .server import KnnServer, ServerTick, ServerTickResult
+from .tenant import (
+    AdmissionError,
+    QuotaExceededError,
+    TenantHandle,
+    TenantQueryHandle,
+)
+
+__all__ = [
+    "KnnServer",
+    "ServerTick",
+    "ServerTickResult",
+    "TenantHandle",
+    "TenantQueryHandle",
+    "AdmissionError",
+    "QuotaExceededError",
+    "ResultCache",
+    "CacheStats",
+    "TenantRegistry",
+    "ComputeView",
+]

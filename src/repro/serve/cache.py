@@ -1,0 +1,118 @@
+"""Epoch-keyed result cache for overlapping hotspot queries (DESIGN.md §16).
+
+Tenants of one :class:`~repro.serve.server.KnnServer` share one moving-object
+world, and under hotspot workloads they ask about the SAME places: the cache
+turns the second tenant's identical query into a host-side array copy instead
+of device work.  The contract (the AppLovin caching pattern in SNIPPETS.md —
+results keyed on the index epoch, invalidated by ingest):
+
+* **Key** = the tenant-agnostic query geometry — the exact float bit patterns
+  of the query position plus the exclusion qid (qid is part of the result's
+  definition: it removes the issuing object from its own list).  Tenants
+  never appear in the key; a cached list is correct for ANY tenant asking
+  the bitwise-same question, which is what makes sharing sound.
+* **Epoch** = a monotone counter over the object world.  Any delta ingest,
+  snapshot ingest, or drift rebuild bumps it; a bump atomically invalidates
+  every entry (the store only ever holds entries of the CURRENT epoch, so
+  "key = (geometry, epoch)" degenerates to "clear on bump" — no stale entry
+  can survive to be looked up).  Results computed under epoch *e* are only
+  inserted if the epoch is still *e* when they materialize: an ingest racing
+  an in-flight tick can only lose cached work, never poison the store.
+* **Values** are read-only ``(k,)`` numpy arrays; lookups hand back the
+  stored arrays and assembly into per-tenant results always copies (fancy
+  indexing), so no tenant can mutate what another is served.
+
+Eviction is LRU at a fixed entry capacity.  ``capacity=0`` disables the
+cache entirely (every lookup misses, inserts drop) — the server does this
+under ``collect != "full"``, where neighbour lists never reach the host and
+there is nothing host-side to cache; intra-tick dedup still works there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+__all__ = ["CacheStats", "ResultCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters over the cache's lifetime (monotone; epochs don't reset them)."""
+
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+class ResultCache:
+    """LRU store: geometry key bytes -> read-only (nn_idx, nn_dist) pair."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = int(capacity)
+        self.epoch = 0
+        self.last_invalidation: str | None = None
+        self.stats = CacheStats()
+        self._store: OrderedDict[bytes, tuple] = OrderedDict()
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def bump_epoch(self, reason: str = "ingest") -> int:
+        """Advance the epoch and drop every entry (see module docstring)."""
+        self.epoch += 1
+        self.last_invalidation = reason
+        if self._store:
+            self.stats.invalidations += len(self._store)
+            self._store.clear()
+        return self.epoch
+
+    def lookup(self, key: bytes):
+        """(nn_idx, nn_dist) for ``key`` at the current epoch, else None."""
+        self.stats.lookups += 1
+        ent = self._store.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.stats.hits += 1
+        return ent
+
+    def insert(self, key: bytes, nn_idx, nn_dist):
+        """Store a result under ``key``; no-op when disabled.
+
+        Callers must have verified the epoch they computed under is still
+        current (the server's materialization guard); the cache itself only
+        promises that a bump clears everything inserted before it.
+        """
+        if not self.enabled:
+            return
+        ii = np.array(nn_idx, np.int32, copy=True)
+        dd = np.array(nn_dist, np.float32, copy=True)
+        ii.setflags(write=False)
+        dd.setflags(write=False)
+        self._store[key] = (ii, dd)
+        self._store.move_to_end(key)
+        self.stats.insertions += 1
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1

@@ -1,6 +1,25 @@
+import gc
 import os
 import sys
+
+import pytest
 
 # tests run on the single real CPU device (the dry-run, and only the dry-run,
 # forces 512 placeholder devices — keep that flag OUT of here)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jax_executable_caches():
+    # Every cached jitted executable pins its captured constants as live
+    # device buffers, each a separate anonymous mmap; across the full suite
+    # the process accumulates tens of thousands of maps and crosses
+    # vm.max_map_count (default 65530), at which point XLA's next compile
+    # segfaults instead of raising.  Clearing between modules bounds the
+    # accumulation to one module's worth — every module passes standalone,
+    # so nothing else changes.
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

@@ -477,14 +477,19 @@ def test_compile_time_split_from_wall_time():
     assert r0.compile_s > 0.0
     assert r1.compile_s == 0.0
     assert r0.wall_s >= 0.0 and r1.wall_s >= 0.0
-    # the shim surfaces the same split
+    # the shim surfaces the same split; its tick 1 is the FIRST snapshot
+    # re-ingest of this shape, which runs the "rebuild" maintenance mode —
+    # a distinct static, hence its own one-time compile (DESIGN.md §15) —
+    # so steady state (compile_s == 0) starts at tick 2
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
         eng = TickEngine(EngineConfig(k=5, th_quad=24, l_max=6, window=32,
                                       chunk=96))
     e0 = eng.process_tick(pts, pts[:33], None)
     e1 = eng.process_tick(pts, pts[:33], None)
-    assert e0.compile_s >= 0.0 and e1.compile_s == 0.0
+    e2 = eng.process_tick(pts, pts[:33], None)
+    assert e0.compile_s >= 0.0 and e1.compile_s >= 0.0
+    assert e2.compile_s == 0.0
 
 
 # ------------------------------------------------------- drift rebuild

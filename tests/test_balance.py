@@ -211,6 +211,80 @@ def test_equal_partitioner_plan_equality():
         num_devices=2, partitioner=CostBalancedPartitioner())
 
 
+# ------------------------------------------- tenant-fair boundary weights
+
+def test_tenant_fair_weights_sum_to_one_per_tenant():
+    """Each tenant's rows carry 1/count, so every tenant's total influence
+    on the boundary seed is exactly 1.0 regardless of its query volume."""
+    from repro.core.balance import tenant_fair_weights
+
+    tid = np.array([0, 0, 0, 0, 1, 2, 2], np.int64)
+    w = np.asarray(tenant_fair_weights(tid))
+    assert w.dtype == np.float32 and w.shape == (7,)
+    np.testing.assert_allclose(w, [0.25] * 4 + [1.0] + [0.5] * 2)
+    for t in (0, 1, 2):
+        np.testing.assert_allclose(w[tid == t].sum(), 1.0, rtol=1e-6)
+    # non-contiguous / unordered ids work; empty input is empty
+    w2 = np.asarray(tenant_fair_weights([7, -3, 7]))
+    np.testing.assert_allclose(w2, [0.5, 1.0, 0.5])
+    assert tenant_fair_weights([]).shape == (0,)
+
+
+def test_query_cost_weights_validation_and_bit_identity():
+    """set_query_cost_weights validates eagerly (length, positivity) and —
+    because weights scale the boundary seed only — cannot change bits on
+    the cost-balanced plans even under wildly skewed weights."""
+    from repro.api import KnnSession, ServiceSpec
+
+    def run(weights_fn, plan, mesh):
+        spec = ServiceSpec(k=4, th_quad=16, l_max=5, window=32, chunk=32,
+                           plan=plan, mesh_shape=mesh,
+                           partitioner="cost_balanced")
+        sess = KnnSession(spec)
+        w = make_workload(300, "zipf", seed=13, zipf_a=1.6)
+        sess.ingest_objects(w.positions())
+        h = sess.register_queries(w.positions(),
+                                  np.arange(300, dtype=np.int32))
+        rng = np.random.default_rng(5)
+        out = []
+        for _ in range(3):
+            if weights_fn is not None:
+                sess.set_query_cost_weights(weights_fn(rng))
+            out.append(sess.submit().result())
+            w.advance()
+            sess.update_objects(np.arange(300), w.positions())
+            sess.update_queries(h, w.positions())
+        return out
+
+    skewed = lambda rng: rng.pareto(1.2, 300).astype(np.float32) + 1e-3
+    for plan, mesh in (("sharded", NDEV), ("object_sharded", NDEV),
+                       ("hybrid", None)):
+        a, b = run(None, plan, mesh), run(skewed, plan, mesh)
+        for ra, rb in zip(a, b):
+            np.testing.assert_array_equal(ra.nn_idx, rb.nn_idx, err_msg=plan)
+            np.testing.assert_array_equal(ra.nn_dist, rb.nn_dist,
+                                          err_msg=plan)
+
+    from repro.api import ServiceSpec as SS
+    sess = KnnSession(SS(k=4, th_quad=16, l_max=5, window=32, chunk=32))
+    sess.ingest_objects(make_workload(64, "uniform", seed=0).positions())
+    sess.register_queries(np.zeros((4, 2), np.float32))
+    with pytest.raises(ValueError, match="4-row registry"):
+        sess.set_query_cost_weights(np.ones(3, np.float32))
+    with pytest.raises(ValueError, match="finite and > 0"):
+        sess.set_query_cost_weights(np.array([1, 0, 1, 1], np.float32))
+    with pytest.raises(ValueError, match="finite and > 0"):
+        sess.set_query_cost_weights(np.array([1, np.inf, 1, 1], np.float32))
+    sess.set_query_cost_weights(np.ones(4, np.float32))
+    sess.submit().result()
+    # weights must be re-set after a row-set change (validated at submit)
+    sess.register_queries(np.ones((2, 2), np.float32))
+    with pytest.raises(RuntimeError, match="row set changed"):
+        sess.submit()
+    sess.set_query_cost_weights(None)
+    sess.submit().result()
+
+
 # ------------------------------------------------------- session EMA loop
 
 def test_session_qcost_ema_persists_and_resets():

@@ -21,6 +21,10 @@ partitioner only moves chunk/slice boundaries, and results are a pure
 function of the candidate set.  DESIGN.md §14 added a fourth axis, sweep
 *precision*: ``mixed`` (bf16 widened-radius prefilter + exact fp32 refine)
 must reproduce the fp32 bits across the entire matrix, fuzzed below.
+DESIGN.md §15 added the *maintenance* axis (incremental == rebuild at every
+tick) and §16 the *serving* axis: N tenants coalesced through one
+``repro.serve.KnnServer`` — dedup, fair-share weighting and cache replay on
+the path — must reproduce N solo sessions bitwise.
 
 Runs on however many devices exist: the tier-1 job exercises the matrix on
 1 device, the tier1-multidevice job on a forced 8-device grid where
@@ -312,6 +316,80 @@ def test_maintenance_axis_bit_identical(seed, family, dup_every, zipf_a):
                     np.asarray(getattr(ia, f)), np.asarray(getattr(ib, f)),
                     err_msg=f"{tag}/{f}",
                 )
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),  # seed
+    st.integers(min_value=0, max_value=2),       # family
+    st.integers(min_value=1, max_value=6),       # dup_every
+    st.floats(min_value=1.2, max_value=3.5),     # zipf_a
+)
+def test_server_axis_bit_identical(seed, family, dup_every, zipf_a):
+    """An N-tenant KnnServer == N solo KnnSessions, bitwise, at EVERY tick
+    across the plan × partitioner grid — the sixth harness axis
+    (DESIGN.md §16).
+
+    Three tenants share one server: their query groups overlap on an exact
+    shared prefix (bit-duplicate rows exercise intra-tick dedup; the
+    object clouds carry coincident duplicates and Zipf skew from the same
+    strategies as the rest of the harness).  The motion script hits the
+    serving layer's interesting transitions: tick 0 computes fresh and
+    populates the cache; tick 1 has NO motion, so the whole tick must
+    replay from the epoch-valid cache (asserted: zero computed rows); tick
+    2's delta — fed through ONE tenant's ingest into the shared world —
+    bumps the epoch and forces a full recompute.  Each tenant's rows are
+    then compared bitwise against a solo session replaying the same world
+    script, for every grid cell.  Shapes are held fixed so the jit cache
+    is shared across examples and cells.
+    """
+    from repro.api import KnnSession, ServiceSpec
+    from repro.serve import KnnServer
+
+    n, rows, k = 128, 8, 4
+    pts = _cloud(seed, n, family, dup_every, zipf_a)
+    rng = np.random.default_rng(seed + 5)
+    shared, _ = _queries(pts, rows // 2, seed)  # exact-duplicate prefix
+    tq = []
+    for g in range(3):
+        own = rng.uniform(0, SIDE, (rows - shared.shape[0], 2)).astype(
+            np.float32)
+        qid = np.full((rows,), -2, np.int32)
+        qid[-1] = g
+        tq.append((np.concatenate([shared, own]), qid))
+    ids = rng.choice(n, 16, replace=False).astype(np.int32)
+    new = rng.uniform(0, SIDE, (16, 2)).astype(np.float32)
+    for plan, mesh, part in PLAN_GRID:
+        spec = ServiceSpec(k=k, window=16, chunk=32, l_max=5, th_quad=8,
+                           side=SIDE, plan=plan, mesh_shape=mesh,
+                           partitioner=part)
+        srv = KnnServer(spec)
+        srv.ingest_objects(pts)
+        tenants = [srv.admit(f"t{g}") for g in range(3)]
+        handles = [t.register_queries(*tq[g])
+                   for g, t in enumerate(tenants)]
+        got = []
+        for t in range(3):
+            if t == 2:
+                tenants[1].update_objects(ids, new)
+            st = srv.submit()
+            res = st.result()
+            if t == 1:  # unchanged world: full cache replay, no device work
+                assert res.rows_computed == 0, (plan, part, res)
+            got.append([st.result_for(h) for h in handles])
+        for g, (qpos, qid) in enumerate(tq):
+            sess = KnnSession(spec)
+            sess.ingest_objects(pts)
+            sess.register_queries(qpos, qid)
+            want = [sess.submit().result()]
+            sess.update_objects(ids, new)
+            want.append(sess.submit().result())
+            for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
+                tag = f"{plan}/{part}/t{g}/tick{srv_t}"
+                np.testing.assert_array_equal(
+                    got[srv_t][g][0], want[solo_t].nn_idx, err_msg=tag)
+                np.testing.assert_array_equal(
+                    got[srv_t][g][1], want[solo_t].nn_dist, err_msg=tag)
 
 
 @pytest.mark.parametrize("r", [2, 3, 8])

@@ -1,0 +1,519 @@
+"""Multi-tenant serving layer: admission, quotas, dedup, cache, bit-identity.
+
+The acceptance contract of the ``repro.serve`` subsystem (DESIGN.md §16):
+
+  * an N-tenant :class:`~repro.serve.KnnServer` returns, per tenant, the
+    bitwise-same rows N solo :class:`~repro.api.KnnSession` instances would
+    have produced — across every plan × partitioner, through drift rebuilds
+    and concurrent per-tenant delta ingest, with dedup and cache replay on
+    the serving path (the property harness fuzzes the same contract);
+  * the epoch-keyed result cache hits on identical re-registration, is
+    invalidated by ANY world movement (delta ingest, snapshot ingest, drift
+    rebuild), and can never leak a mutable array across tenants;
+  * quotas bound registration (raise by default, ``clip=True`` degrades to
+    the remaining rows) and quota-clipped rows are served exactly.
+
+Runs on however many devices exist; the subprocess test forces an 8-device
+host grid regardless of the outer environment.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import KnnSession, ServiceSpec
+from repro.launch.mesh import default_hybrid_shape
+from repro.serve import (
+    AdmissionError,
+    KnnServer,
+    QuotaExceededError,
+    ResultCache,
+    TenantRegistry,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+NDEV = jax.device_count()
+SIDE = 22_500.0
+
+PLAN_GRID = (
+    ("single", None, "equal"),
+    ("sharded", NDEV, "equal"),
+    ("sharded", NDEV, "cost_balanced"),
+    ("object_sharded", NDEV, "equal"),
+    ("object_sharded", NDEV, "cost_balanced"),
+    ("hybrid", default_hybrid_shape(NDEV), "equal"),
+    ("hybrid", default_hybrid_shape(NDEV), "cost_balanced"),
+)
+
+
+def _spec(**kw):
+    kw.setdefault("k", 4)
+    kw.setdefault("th_quad", 8)
+    kw.setdefault("l_max", 5)
+    kw.setdefault("window", 16)
+    kw.setdefault("chunk", 32)
+    kw.setdefault("side", SIDE)
+    return ServiceSpec(**kw)
+
+
+def _world(n=128, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+
+
+def _tenant_queries(pts, seed, groups=3, rows=8, overlap=True):
+    """Per-tenant query groups; consecutive tenants share their first rows
+    (exact bit duplicates) so dedup and the cache have something to fold."""
+    rng = np.random.default_rng(seed)
+    out = []
+    shared = rng.uniform(0, SIDE, (rows // 2, 2)).astype(np.float32)
+    for g in range(groups):
+        own = rng.uniform(0, SIDE, (rows - len(shared), 2)).astype(np.float32)
+        qpos = np.concatenate([shared, own]) if overlap else np.concatenate(
+            [rng.uniform(0, SIDE, (len(shared), 2)).astype(np.float32), own])
+        qid = np.full((rows,), -2, np.int32)
+        qid[-1] = g  # one self-excluding row per tenant
+        out.append((qpos, qid))
+    return out
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_dedup_and_bit_pattern_keys():
+    """compute_view folds exact duplicates across tenants; keys are raw bit
+    patterns, so -0.0 and 0.0 (different bits) never alias."""
+    reg = TenantRegistry()
+    a = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+    reg.register(0, a)
+    reg.register(1, a)  # tenant 1 asks the bitwise-same questions
+    reg.register(1, np.array([[5.0, 6.0]], np.float32))
+    v = reg.compute_view()
+    assert reg.nrows == 5 and v.n_unique == 3
+    # every logical row maps back to its own bits
+    np.testing.assert_array_equal(v.qpos[v.row_to_unique], reg.qpos)
+    np.testing.assert_array_equal(v.qid[v.row_to_unique], reg.qid)
+    assert len(v.keys) == 3 and len(set(v.keys)) == 3
+    # same geometry, different qid -> different key (qid defines the result)
+    reg.register(0, a[:1], np.array([7], np.int32))
+    assert reg.compute_view().n_unique == 4
+    # signed zero: bitwise-distinct, must not alias
+    reg.register(0, np.array([[0.0, 0.0], [-0.0, 0.0]], np.float32))
+    assert reg.compute_view().n_unique == 6
+
+
+def test_registry_group_lifecycle():
+    reg = TenantRegistry()
+    h0 = reg.register(0, _world(4, 1))
+    h1 = reg.register(1, _world(3, 2))
+    assert reg.tenant_count(0) == 4 and reg.tenant_count(1) == 3
+    reg.update(h1, _world(3, 5))
+    with pytest.raises(ValueError, match="owns 3 rows"):
+        reg.update(h1, _world(2, 5))
+    reg.drop(h0)
+    assert reg.tenant_count(0) == 0 and reg.nrows == 3
+    with pytest.raises(KeyError, match="not live"):
+        reg.drop(h0)
+    reg.drop_tenant(1)
+    assert reg.nrows == 0
+    with pytest.raises(ValueError, match="empty query group"):
+        reg.register(0, np.zeros((0, 2), np.float32))
+
+
+# -------------------------------------------------------------------- cache
+
+def test_result_cache_lru_and_epoch_semantics():
+    c = ResultCache(capacity=2)
+    ii = np.arange(4, dtype=np.int32)
+    dd = np.arange(4, dtype=np.float32)
+    assert c.lookup(b"a") is None
+    c.insert(b"a", ii, dd)
+    got_i, got_d = c.lookup(b"a")
+    np.testing.assert_array_equal(got_i, ii)
+    assert not got_i.flags.writeable and not got_d.flags.writeable
+    # values are copies: mutating the source never reaches the store
+    ii[0] = -99
+    assert c.lookup(b"a")[0][0] == 0
+    # LRU: touching "a" makes "b" the eviction victim at capacity 2
+    c.insert(b"b", ii, dd)
+    c.lookup(b"a")
+    c.insert(b"c", ii, dd)
+    assert c.lookup(b"b") is None and c.lookup(b"a") is not None
+    assert c.stats.evictions == 1
+    # epoch bump atomically clears the store
+    e0 = c.epoch
+    c.bump_epoch("test-ingest")
+    assert c.epoch == e0 + 1 and len(c) == 0
+    assert c.last_invalidation == "test-ingest"
+    assert c.stats.invalidations == 2  # "a" and "c" were live
+    assert c.lookup(b"a") is None
+    # disabled cache: inserts drop, lookups miss
+    off = ResultCache(capacity=0)
+    assert not off.enabled
+    off.insert(b"a", ii, dd)
+    assert off.lookup(b"a") is None
+    with pytest.raises(ValueError, match="capacity"):
+        ResultCache(capacity=-1)
+
+
+# ------------------------------------------------------- admission + quotas
+
+def test_admission_and_eviction():
+    srv = KnnServer(_spec(), max_tenants=2)
+    a = srv.admit("alice")
+    with pytest.raises(AdmissionError, match="already admitted"):
+        srv.admit("alice")
+    srv.admit("bob")
+    with pytest.raises(AdmissionError, match="max_tenants"):
+        srv.admit("carol")
+    srv.ingest_objects(_world())
+    ha = a.register_queries(_world(4, 3))
+    assert a.query_count == 4 and srv.query_count == 4
+    srv.evict(a)
+    assert not a.live and srv.query_count == 0
+    with pytest.raises(AdmissionError, match="evicted"):
+        a.register_queries(_world(2, 4))
+    with pytest.raises(AdmissionError, match="not admitted"):
+        srv.evict(a)
+    del ha
+    # the freed slot readmits
+    srv.admit("carol")
+
+
+def test_quota_raise_and_clip():
+    srv = KnnServer(_spec(), default_quota=6)
+    t = srv.admit("alice")
+    assert t.quota == 6
+    t.register_queries(_world(4, 1))
+    assert t.quota_remaining == 2
+    with pytest.raises(QuotaExceededError, match="exceed quota 6"):
+        t.register_queries(_world(4, 2))
+    # clip=True registers exactly the first quota_remaining rows
+    q = _world(4, 2)
+    h = t.register_queries(q, clip=True)
+    assert h.count == 2 and t.quota_remaining == 0
+    np.testing.assert_array_equal(
+        srv._registry.qpos[srv._registry.group_rows(h.hid)], q[:2])
+    # at zero remaining even clip raises
+    with pytest.raises(QuotaExceededError):
+        t.register_queries(_world(1, 3), clip=True)
+    # dropping frees quota
+    t.drop_queries(h)
+    assert t.quota_remaining == 2
+    with pytest.raises(ValueError, match="quota must be >= 1"):
+        srv.admit("bob", quota=0)
+
+
+# ----------------------------------------------- server ≡ solo, full grid
+
+def _solo_results(spec, pts_script, qpos, qid):
+    """Replay one tenant's view through a solo session; returns per-tick rows."""
+    sess = KnnSession(spec)
+    out = []
+    for op, payload in pts_script:
+        if op == "snapshot":
+            sess.ingest_objects(payload)
+        elif op == "delta":
+            sess.update_objects(*payload)
+        else:
+            if op == "register":
+                sess.register_queries(qpos, qid)
+            r = sess.submit().result()
+            out.append((np.asarray(r.nn_idx), np.asarray(r.nn_dist)))
+    return out
+
+
+@pytest.mark.parametrize("plan,mesh,part", PLAN_GRID)
+def test_server_bitwise_equals_solo_sessions(plan, mesh, part):
+    """3 overlapping tenants through one server == 3 solo sessions, bitwise,
+    per tick — including a no-motion tick served from the cache and a delta
+    tick that invalidates it (the tentpole acceptance criterion)."""
+    spec = _spec(plan=plan, mesh_shape=mesh, partitioner=part)
+    pts = _world(128, seed=10)
+    tq = _tenant_queries(pts, seed=11, groups=3, rows=8)
+    rng = np.random.default_rng(12)
+
+    srv = KnnServer(spec)
+    srv.ingest_objects(pts)
+    tenants = [srv.admit(f"t{i}") for i in range(3)]
+    handles = [t.register_queries(*tq[i]) for i, t in enumerate(tenants)]
+
+    deltas = []
+    for _ in range(2):
+        ids = rng.choice(128, 16, replace=False).astype(np.int32)
+        deltas.append((ids, rng.uniform(0, SIDE, (16, 2)).astype(np.float32)))
+
+    server_rows = []
+    # tick 0: fresh; tick 1: NO motion (pure cache replay); ticks 2-3: deltas
+    # fed by rotating tenants (concurrent per-tenant ingest)
+    for t in range(4):
+        if t >= 2:
+            tenants[t % 3].update_objects(*deltas[t - 2])
+        st = srv.submit()
+        res = st.result()
+        server_rows.append([st.result_for(h) for h in handles])
+        if t == 1:  # world unchanged -> whole tick replays from the cache
+            assert res.rows_computed == 0 and res.inner is None
+            assert res.hit_rate == 1.0
+    for i, (qpos, qid) in enumerate(tq):
+        script = [("snapshot", pts), ("register", None),
+                  ("delta", deltas[0]), ("tick", None),
+                  ("delta", deltas[1]), ("tick", None)]
+        solo = _solo_results(spec, script, qpos, qid)
+        # server ticks 0 and 1 both correspond to solo tick 0 (no motion)
+        for srv_t, solo_t in ((0, 0), (1, 0), (2, 1), (3, 2)):
+            ii, dd, qids = server_rows[srv_t][i]
+            np.testing.assert_array_equal(
+                ii, solo[solo_t][0], err_msg=f"t{i} tick{srv_t}")
+            np.testing.assert_array_equal(
+                dd, solo[solo_t][1], err_msg=f"t{i} tick{srv_t}")
+            np.testing.assert_array_equal(qids, qid)
+
+
+def test_quota_clipped_rows_served_exactly():
+    """A clip-registered group's surviving rows are served with the same bits
+    a solo session gives those rows."""
+    spec = _spec()
+    pts = _world(96, seed=20)
+    q = _world(8, seed=21)
+    srv = KnnServer(spec)
+    srv.ingest_objects(pts)
+    t = srv.admit("alice", quota=5)
+    h = t.register_queries(q, clip=True)
+    assert h.count == 5
+    ii, dd, _ = srv.submit().result_for(h)
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(q[:5])
+    r = sess.submit().result()
+    np.testing.assert_array_equal(ii, r.nn_idx)
+    np.testing.assert_array_equal(dd, r.nn_dist)
+
+
+# ------------------------------------------------- drift rebuild + epochs
+
+def test_drift_rebuild_mid_flight_with_concurrent_delta():
+    """One tenant's teleport delta triggers a drift rebuild; while that tick
+    is still in flight another tenant ingests a further delta and submits.
+    Epoch hygiene: the rebuild bumps when observed, the racing tick never
+    inserts stale entries, and every tick stays solo-exact."""
+    n = 2000
+    rng = np.random.default_rng(30)
+    uniform = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    clustered = (rng.normal(0, 60, (n, 2)) + 11_250).astype(
+        np.float32).clip(0, SIDE - 1)
+    spec = _spec(k=8, th_quad=32, l_max=6, window=64, chunk=512,
+                 rebuild_factor=1.5)
+    small_ids = np.arange(32, dtype=np.int32)
+    small_new = rng.uniform(0, SIDE, (32, 2)).astype(np.float32)
+
+    srv = KnnServer(spec)
+    srv.ingest_objects(uniform)
+    a, b = srv.admit("alice"), srv.admit("bob")
+    qa = a.register_queries(uniform[:64], np.arange(64, dtype=np.int32))
+    qb = b.register_queries(uniform[64:128])
+    srv.submit().result()
+    srv.submit().result()  # baseline tick (work-at-build anchor)
+    e0 = srv.cache.epoch
+    b.update_objects(np.arange(n, dtype=np.int32), clustered)
+    assert srv.cache.epoch == e0 + 1  # delta ingest bumps immediately
+    st_drift = srv.submit()  # drift decision pending
+    # concurrent ingest + submit while the drift tick is in flight
+    a.update_objects(small_ids, small_new)
+    st_next = srv.submit()
+    r_drift = st_drift.result()
+    assert r_drift.rebuilt
+    assert srv.cache.last_invalidation == "drift-rebuild"
+    assert srv.cache.epoch > e0 + 1
+    r_next = st_next.result()
+    assert r_next.rows_computed == r_next.rows_unique  # nothing stale served
+    assert r_next.epoch != r_drift.epoch
+
+    # solo replay, per tenant, same op order
+    world2 = clustered.copy()
+    world2[small_ids] = small_new
+    for qpos, qid, handle, ticks in (
+        (uniform[:64], np.arange(64, dtype=np.int32), qa, None),
+        (uniform[64:128], None, qb, None),
+    ):
+        sess = KnnSession(spec)
+        sess.ingest_objects(uniform)
+        sess.register_queries(qpos, qid)
+        sess.submit().result()
+        sess.submit().result()
+        sess.update_objects(np.arange(n, dtype=np.int32), clustered)
+        h1 = sess.submit()
+        sess.update_objects(small_ids, small_new)
+        h2 = sess.submit()
+        s1, s2 = h1.result(), h2.result()
+        assert s1.rebuilt
+        for st, sr in ((st_drift, s1), (st_next, s2)):
+            ii, dd, _ = st.result_for(handle)
+            np.testing.assert_array_equal(ii, sr.nn_idx)
+            np.testing.assert_array_equal(dd, sr.nn_dist)
+
+
+def test_epoch_bumps_on_every_world_movement():
+    srv = KnnServer(_spec())
+    pts = _world(64, seed=40)
+    srv.ingest_objects(pts)
+    assert srv.cache.epoch == 1  # snapshot ingest counts
+    t = srv.admit("alice")
+    t.register_queries(_world(4, 41))
+    r0 = srv.submit().result()
+    assert r0.rows_computed == 4 and srv.cache.stats.insertions == 4
+    # identical re-registration by ANOTHER tenant hits the cache
+    u = srv.admit("bob")
+    hu = u.register_queries(srv._registry.qpos[:4].copy(),
+                            srv._registry.qid[:4].copy())
+    r1 = srv.submit().result()
+    assert r1.rows_computed == 0 and r1.cache_hit_rows == 8
+    # delta ingest invalidates: next tick recomputes everything
+    t.update_objects(np.array([0], np.int32), pts[:1] + 1.0)
+    r2 = srv.submit().result()
+    assert r2.rows_computed == r2.rows_unique and r2.cache_hit_rows == 0
+    # snapshot ingest invalidates too
+    e = srv.cache.epoch
+    srv.ingest_objects(pts)
+    assert srv.cache.epoch == e + 1 and len(srv.cache) == 0
+    assert srv.submit().result_for(hu)  # still serveable after the bumps
+
+
+def test_cache_no_cross_tenant_mutation():
+    """A tenant mutating its returned arrays cannot corrupt what another
+    tenant is later served from the cache."""
+    spec = _spec()
+    srv = KnnServer(spec)
+    pts = _world(96, seed=50)
+    srv.ingest_objects(pts)
+    q = _world(6, seed=51)
+    a, b = srv.admit("alice"), srv.admit("bob")
+    ha = a.register_queries(q)
+    st0 = srv.submit()
+    ii_a, dd_a, _ = st0.result_for(ha)
+    want_i, want_d = ii_a.copy(), dd_a.copy()
+    ii_a[:] = -7
+    dd_a[:] = -7.0
+    hb = b.register_queries(q)  # bitwise-same questions
+    st1 = srv.submit()
+    r1 = st1.result()
+    assert r1.rows_computed == 0  # served purely from the cache
+    ii_b, dd_b, _ = st1.result_for(hb)
+    np.testing.assert_array_equal(ii_b, want_i)
+    np.testing.assert_array_equal(dd_b, want_d)
+    ii_b[:] = 9  # callers own their copies; the store stays read-only
+    ii_b2, _, _ = st1.result_for(ha)
+    np.testing.assert_array_equal(ii_b2, want_i)
+
+
+# ------------------------------------------------------- collect="stats"
+
+def test_collect_stats_dedup_without_cache():
+    """Under collect="stats" the cache is disabled (lists never reach the
+    host) but intra-tick dedup still shares device work, and result_for
+    returns device rows matching the full-collect bits."""
+    pts = _world(96, seed=60)
+    q = _world(6, seed=61)
+    srv = KnnServer(_spec(collect="stats"))
+    assert not srv.cache.enabled
+    srv.ingest_objects(pts)
+    a, b = srv.admit("alice"), srv.admit("bob")
+    ha, hb = a.register_queries(q), b.register_queries(q)
+    st = srv.submit()
+    res = st.result()
+    assert res.rows_total == 12 and res.rows_computed == 6
+    assert res.dedup_hit_rows == 6 and res.cache_hit_rows == 0
+    ii, dd, _ = st.result_for(hb)  # device arrays (jnp gather path)
+    full = KnnServer(_spec(collect="full"))
+    full.ingest_objects(pts)
+    hf = full.admit("x").register_queries(q)
+    fi, fd, _ = full.submit().result_for(hf)
+    np.testing.assert_array_equal(np.asarray(ii), fi)
+    np.testing.assert_array_equal(np.asarray(dd), fd)
+    # next tick recomputes (no cache under stats) but stays deduped
+    r2 = srv.submit().result()
+    assert r2.rows_computed == 6 and r2.cache_hit_rows == 0
+
+
+def test_result_for_errors():
+    srv = KnnServer(_spec())
+    srv.ingest_objects(_world(64, seed=70))
+    with pytest.raises(RuntimeError, match="no registered tenant queries"):
+        srv.submit()
+    a = srv.admit("alice")
+    h = a.register_queries(_world(3, 71))
+    a.drop_queries(h)
+    b = srv.admit("bob")
+    hb = b.register_queries(_world(3, 72))
+    st = srv.submit()
+    with pytest.raises(KeyError, match="owned no rows"):
+        st.result_for(h)  # dropped before submit
+    with pytest.raises(KeyError, match="belongs to tenant"):
+        a.drop_queries(hb)
+    st.result_for(hb)
+
+
+# --------------------------------------- forced 8-device mesh (real XLA)
+
+def test_server_solo_parity_on_8_devices():
+    """3 tenants through one server on a real 8-device grid == solo sessions,
+    bitwise, for the mesh plans under cost_balanced — with a delta tick and a
+    cache-replay tick in the script.  Subprocess because the device count
+    must be set before jax init."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.api import KnnSession, ServiceSpec
+from repro.serve import KnnServer
+
+SIDE = 22_500.0
+rng = np.random.default_rng(0)
+pts = rng.uniform(0, SIDE, (512, 2)).astype(np.float32)
+shared = rng.uniform(0, SIDE, (8, 2)).astype(np.float32)
+tq = [np.concatenate([shared, rng.uniform(0, SIDE, (8, 2)).astype(np.float32)])
+      for _ in range(3)]
+ids = rng.choice(512, 32, replace=False).astype(np.int32)
+new = rng.uniform(0, SIDE, (32, 2)).astype(np.float32)
+
+for plan, mesh in (("sharded", 8), ("hybrid", (2, 4))):
+    spec = ServiceSpec(k=4, th_quad=8, l_max=5, window=16, chunk=32,
+                       side=SIDE, plan=plan, mesh_shape=mesh,
+                       partitioner="cost_balanced")
+    srv = KnnServer(spec)
+    srv.ingest_objects(pts)
+    tenants = [srv.admit(f"t{i}") for i in range(3)]
+    handles = [t.register_queries(tq[i]) for i, t in enumerate(tenants)]
+    got = []
+    for t in range(3):
+        if t == 2:
+            tenants[1].update_objects(ids, new)
+        st = srv.submit()
+        res = st.result()
+        if t == 1:
+            assert res.rows_computed == 0, (plan, res)  # cache replay
+        got.append([st.result_for(h) for h in handles])
+    for i in range(3):
+        sess = KnnSession(spec)
+        sess.ingest_objects(pts)
+        sess.register_queries(tq[i])
+        want = [sess.submit().result()]
+        sess.update_objects(ids, new)
+        want.append(sess.submit().result())
+        for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
+            np.testing.assert_array_equal(
+                got[srv_t][i][0], want[solo_t].nn_idx, err_msg=f"{plan}/t{i}")
+            np.testing.assert_array_equal(
+                got[srv_t][i][1], want[solo_t].nn_dist, err_msg=f"{plan}/t{i}")
+print("SERVE_8DEV_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)  # the child pins its own device count
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "SERVE_8DEV_OK" in r.stdout
