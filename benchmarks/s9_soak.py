@@ -11,14 +11,16 @@ up front and never waits on service (open loop): a slow tick eats the next
 arrivals late, which is exactly what makes the TAIL of the latency
 distribution honest.  Per row we record:
 
-* ``p50_ms / p95_ms / p99_ms`` — post-warmup whole-tick serve latency
-  (submit → result, compile time excluded via the session's compile_s
-  attribution);
-* ``hit_rate`` — post-warmup fraction of logical tenant rows served without
-  fresh device work: intra-tick dedup (overlapping pool groups fold into
-  one computed row) + cross-tick epoch-valid cache replay (no-motion ticks
-  serve straight from the cache).  Nonzero under Zipf overlap is the
-  acceptance bar;
+* ``p50_ms / p95_ms / p99_ms`` — post-warmup attributable serve latency
+  (``ServerTickResult.wall_s`` = staging + device drain + assembly; host
+  idle and compile excluded by construction);
+* ``dedup_rate`` / ``cache_rate`` — post-warmup fractions of logical tenant
+  rows served without fresh device work, reported SEPARATELY: intra-tick
+  dedup (overlapping pool groups fold into one computed row) vs. cross-tick
+  cache replay (rows served from a still-valid entry).  ``hit_rate`` keeps
+  the combined number; a nonzero combined rate under Zipf overlap is the
+  acceptance bar, and under ``--invalidations epoch,spatial`` the cache
+  column is what shows spatial invalidation surviving unrelated motion;
 * ``cache`` — the ResultCache lifetime counters (lookups/hits/insertions/
   evictions/invalidations) and the epoch count actually consumed.
 
@@ -77,7 +79,7 @@ def _child(args) -> None:
         k=args.k, th_quad=96, l_max=7, window=128, chunk=args.chunk,
         plan=args.plan, mesh_shape=_parse_mesh(args.mesh),
         partitioner=args.partitioner,
-    ))
+    ), invalidation=args.invalidation)
     server.ingest_objects(pts)
     tenants = [server.admit(f"t{i}", quota=g) for i in range(T)]
 
@@ -109,7 +111,8 @@ def _child(args) -> None:
 
     event_i = 0
     cur = pts.copy()
-    walls, hits_at, served_at, computed_at = [], 0, 0, 0
+    walls, served_at, computed_at = [], 0, 0
+    dedup_at, cache_at = 0, 0
     rebuilds = 0
     for tick in range(args.ticks):
         for _ in range(int(arrivals[tick])):
@@ -124,21 +127,23 @@ def _child(args) -> None:
             new = rng.uniform(0, SIDE, (d, 2)).astype(np.float32)
             cur[ids] = new
             tenants[tick % T].update_objects(ids, new)
-        t0 = time.perf_counter()
         res = server.submit().result()
-        wall = time.perf_counter() - t0 - res.compile_s
         rebuilds += bool(res.rebuilt)
         if tick >= args.warmup:
-            walls.append(wall)
+            # attributable latency, not the host loop's wall: staging +
+            # drain + assembly, idle and compile excluded by construction
+            walls.append(res.wall_s)
             served_at += res.rows_total
             computed_at += res.rows_computed
-            hits_at += res.dedup_hit_rows + res.cache_hit_rows
+            dedup_at += res.dedup_hit_rows
+            cache_at += res.cache_hit_rows
     walls = np.asarray(walls)
     p50, p95, p99 = (float(x) for x in np.percentile(walls, [50, 95, 99]))
     row = {
         "plan": args.plan,
         "mesh": args.mesh,
         "partitioner": args.partitioner,
+        "invalidation": args.invalidation,
         "devices": int(jax.device_count()),
         "objects": n,
         "tenants": T,
@@ -159,7 +164,9 @@ def _child(args) -> None:
         "p99_ms": p99 * 1e3,
         "rows_served": served_at,
         "rows_computed": computed_at,
-        "hit_rate": hits_at / max(served_at, 1),
+        "dedup_rate": dedup_at / max(served_at, 1),
+        "cache_rate": cache_at / max(served_at, 1),
+        "hit_rate": (dedup_at + cache_at) / max(served_at, 1),
         "epochs": int(server.cache.epoch),
         "cache": server.cache.stats.as_dict(),
     }
@@ -180,49 +187,66 @@ def run(
     k: int = 16,
     chunk: int = 256,
     plans=DEFAULT_PLANS,
+    invalidations=("epoch",),
+    churns=None,
     devices: int = DEFAULT_DEVICES,
     check: bool = True,
     out: str | None = "BENCH_soak.json",
 ):
-    """Soak each (plan, partitioner) row on forced host devices.
+    """Soak each (plan, partitioner) × invalidation × churn row on forced
+    host devices.
 
-    Returns the row list; with ``check`` (full runs) asserts the §16
-    acceptance criterion — a NONZERO hit rate under the Zipf-overlapping
-    tenant workload on every row.
+    ``invalidations`` selects the server's cache-invalidation modes to
+    sweep; ``churns`` (None = just ``churn``) the per-motion-tick moved
+    fraction — the epoch-vs-spatial comparison at 1% and 10% churn is the
+    invalidation axis the CI soak uploads.  Returns the row list; with
+    ``check`` (full runs) asserts the §16 acceptance criterion — a NONZERO
+    hit rate under the Zipf-overlapping tenant workload on every row.
     """
     here = os.path.dirname(os.path.abspath(__file__))
     src = os.path.join(here, "..", "src")
+    if churns is None:
+        churns = (churn,)
     rows = []
     for plan, mesh, partitioner in plans:
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = (
-            env.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={devices}"
-        ).strip()
-        cmd = [
-            sys.executable, os.path.abspath(__file__), "--child",
-            "--plan", plan, "--mesh", mesh, "--partitioner", partitioner,
-            "--objects", str(objects), "--tenants", str(tenants),
-            "--pool", str(pool), "--group", str(group),
-            "--lam", str(lam), "--zipf-a", str(zipf_a),
-            "--ticks", str(ticks), "--warmup", str(warmup),
-            "--churn", str(churn), "--motion-every", str(motion_every),
-            "--k", str(k), "--chunk", str(chunk),
-        ]
-        r = subprocess.run(cmd, env=env, capture_output=True, text=True)
-        if r.returncode != 0:
-            raise RuntimeError(
-                f"s9 child (plan={plan}, partitioner={partitioner}) "
-                "failed:\n" + r.stderr[-2000:]
-            )
-        row = json.loads(next(
-            l for l in r.stdout.splitlines() if l.startswith("S9ROW ")
-        )[6:])
-        rows.append(row)
-        print(f"s9_soak/{plan}_{partitioner},p50={row['p50_ms']:.1f}ms,"
-              f"p95={row['p95_ms']:.1f}ms,p99={row['p99_ms']:.1f}ms,"
-              f"hit={row['hit_rate']:.2f}", flush=True)
+        for invalidation in invalidations:
+            for c in churns:
+                env = dict(os.environ)
+                env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+                env["XLA_FLAGS"] = (
+                    env.get("XLA_FLAGS", "")
+                    + f" --xla_force_host_platform_device_count={devices}"
+                ).strip()
+                cmd = [
+                    sys.executable, os.path.abspath(__file__), "--child",
+                    "--plan", plan, "--mesh", mesh,
+                    "--partitioner", partitioner,
+                    "--invalidation", invalidation,
+                    "--objects", str(objects), "--tenants", str(tenants),
+                    "--pool", str(pool), "--group", str(group),
+                    "--lam", str(lam), "--zipf-a", str(zipf_a),
+                    "--ticks", str(ticks), "--warmup", str(warmup),
+                    "--churn", str(c), "--motion-every", str(motion_every),
+                    "--k", str(k), "--chunk", str(chunk),
+                ]
+                r = subprocess.run(cmd, env=env, capture_output=True,
+                                   text=True)
+                if r.returncode != 0:
+                    raise RuntimeError(
+                        f"s9 child (plan={plan}, partitioner={partitioner}, "
+                        f"invalidation={invalidation}, churn={c}) failed:\n"
+                        + r.stderr[-2000:]
+                    )
+                row = json.loads(next(
+                    l for l in r.stdout.splitlines()
+                    if l.startswith("S9ROW ")
+                )[6:])
+                rows.append(row)
+                print(
+                    f"s9_soak/{plan}_{partitioner}_{invalidation}_c{c:g},"
+                    f"p50={row['p50_ms']:.1f}ms,p95={row['p95_ms']:.1f}ms,"
+                    f"p99={row['p99_ms']:.1f}ms,dedup={row['dedup_rate']:.2f},"
+                    f"cache={row['cache_rate']:.2f}", flush=True)
     if check:
         for row in rows:
             assert row["hit_rate"] > 0.0, (
@@ -251,6 +275,15 @@ def main() -> None:
     ap.add_argument("--mesh", default="8",
                     help="mesh shape: '' (single), '8' (1-D) or '2x4'")
     ap.add_argument("--partitioner", default="cost_balanced")
+    ap.add_argument("--invalidation", default="epoch",
+                    choices=("epoch", "spatial"),
+                    help="cache invalidation mode for the child row")
+    ap.add_argument("--invalidations", default=None,
+                    help="comma list of invalidation modes to sweep "
+                         "(e.g. 'epoch,spatial'; default: --invalidation)")
+    ap.add_argument("--churns", default=None,
+                    help="comma list of churn fractions to sweep "
+                         "(e.g. '0.01,0.10'; default: --churn)")
     ap.add_argument("--objects", type=int, default=20_000)
     ap.add_argument("--tenants", type=int, default=16)
     ap.add_argument("--pool", type=int, default=8,
@@ -284,10 +317,15 @@ def main() -> None:
     plans = (tuple((p.split(":") + ["", "equal"])[:3]
                    for p in args.plans.split(","))
              if args.plans else DEFAULT_PLANS)
+    invalidations = (tuple(args.invalidations.split(","))
+                     if args.invalidations else (args.invalidation,))
+    churns = (tuple(float(c) for c in args.churns.split(","))
+              if args.churns else None)
     run(objects=args.objects, tenants=args.tenants, pool=args.pool,
         group=args.group, lam=args.lam, zipf_a=args.zipf_a, ticks=args.ticks,
         warmup=args.warmup, churn=args.churn, motion_every=args.motion_every,
-        k=args.k, chunk=args.chunk, plans=plans, devices=args.devices,
+        k=args.k, chunk=args.chunk, plans=plans, invalidations=invalidations,
+        churns=churns, devices=args.devices,
         check=not args.no_check, out=args.out)
 
 

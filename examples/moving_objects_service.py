@@ -121,6 +121,12 @@ def _parse_args():
                          "batch splits round-robin across tenants and each "
                          "tick's object delta is fed by the next tenant in "
                          "turn; 1 (default) = the solo KnnSession path")
+    ap.add_argument("--invalidation", default="epoch",
+                    choices=["epoch", "spatial"],
+                    help="result-cache invalidation mode of the --tenants "
+                         "server: epoch clears the store on every delta; "
+                         "spatial evicts only entries whose k-th-distance "
+                         "ball a moved row stabs (DESIGN.md §16)")
     return ap.parse_args()
 
 
@@ -256,16 +262,17 @@ def _serve_tenants(args, spec):
     ``i::N``), every tenant observes the SAME moving-object world, and each
     tick's object delta is fed by the next tenant in round-robin turn — the
     serving-layer shape of DESIGN.md §16.  Per-tick hit rate shows how much
-    device work the dedup + epoch-keyed cache saved (0 while every tick
-    moves objects: motion bumps the epoch; try --churn with some no-motion
-    ticks, or overlapping tenant queries, to see cache hits).
+    device work the dedup + result cache saved (under the default epoch
+    invalidation it is 0 while every tick moves objects — motion clears the
+    store; --invalidation spatial keeps entries whose k-th ball no moved
+    row stabbed, so localized --churn motion leaves hot entries serving).
     """
     import numpy as np
 
     from repro.data import make_workload
     from repro.serve import KnnServer
 
-    server = KnnServer(spec)
+    server = KnnServer(spec, invalidation=args.invalidation)
     workload = make_workload(args.objects, args.distribution, seed=0)
     T = args.tenants
 

@@ -107,6 +107,27 @@ class TickHandle:
         self._result: TickResult | None = None
         self._result_dev: TickResult | None = None
 
+    @property
+    def finalized(self) -> bool:
+        """Has this tick's drift bookkeeping landed (finalize or result)?
+
+        Public read-only view for layers above the session (the server's
+        epoch/cache observation) — once True, :attr:`rebuilt_post` is
+        settled and will not change.
+        """
+        return self._finalized or self._result is not None
+
+    @property
+    def rebuilt_post(self) -> bool:
+        """Did the drift check of THIS tick trigger a rebuild after it ran?
+
+        Meaningful once :attr:`finalized` is True (False until then).  A
+        post-rebuild re-sorts the same positions the tick already answered
+        under — results stay bit-correct; it is scheduling bookkeeping, not
+        a world change.
+        """
+        return self._rebuilt_post
+
     def done(self) -> bool:
         """Non-blocking: have this tick's result arrays materialized?"""
         if self._result is not None:

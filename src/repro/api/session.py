@@ -702,6 +702,10 @@ class KnnSession:
                 self._obj_bounds, jnp.int32(nq),
             )
         submit_s = time.perf_counter() - t0
+        # submit_s covers the whole dispatch window, INCLUDING any first-
+        # compile that ran synchronously inside it — compile_s below is the
+        # submit-side attribution consumers subtract to get pure staging
+        # time (the serve layer's wall_s decomposition relies on this)
         # key must mirror everything the jit cache keys on: shapes AND the
         # statics (th_quad/l_max ride in the index pytree's meta fields)
         key = (int(qpos_dev.shape[0]), self.num_objects, spec.k, spec.window,

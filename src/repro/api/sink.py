@@ -38,7 +38,8 @@ class TickAggregates(NamedTuple):
     field is already reduced over live rows only.
     """
 
-    kth_dist: jnp.ndarray  # (Qp,) f32 — squared k-th distance per query
+    kth_dist: jnp.ndarray  # (Qp,) f32 — Euclidean k-th distance per query
+    # (same units as nn_dist; the serve cache squares it at insert time)
     kth_drift_mean: jnp.ndarray  # () f32 — mean |kth - prev_kth|, live+finite
     kth_drift_max: jnp.ndarray  # () f32
     churn_mean: jnp.ndarray  # () f32 — mean fraction of new neighbour ids

@@ -21,6 +21,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import morton
 from ..kernels.delta_splice import (
@@ -37,6 +38,7 @@ __all__ = [
     "leaf_of_points",
     "starts_from_pyramid",
     "pyramid_delta",
+    "ball_stab_mask",
 ]
 
 
@@ -173,6 +175,138 @@ def pyramid_delta(
         cur = cur.reshape(-1, 4).sum(axis=1)
         levels.append(cur)
     return jnp.concatenate(list(reversed(levels)))
+
+
+def _part1by1_np(v: np.ndarray) -> np.ndarray:
+    """numpy replica of :func:`repro.core.morton.part1by1` (host-side stab)."""
+    v = np.asarray(v, np.uint32)
+    v = (v | (v << 8)) & np.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & np.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & np.uint32(0x33333333)
+    v = (v | (v << 1)) & np.uint32(0x55555555)
+    return v
+
+
+def _encode_cells_np(cx: np.ndarray, cy: np.ndarray) -> np.ndarray:
+    return (_part1by1_np(cx) | (_part1by1_np(cy) << 1)).astype(np.int64)
+
+
+# conservative widening on the stored squared k-th distance: the kernel
+# measures the Euclidean k-th distance in f32 (f32 squared distance,
+# possibly FMA-fused, then f32 sqrt), and the cache squares that back in
+# f64 on insert — so the stored r^2 can sit a handful of ulps below the
+# exact value (a few 2**-23 relative from the kernel's d^2 plus half an
+# ulp from the sqrt, doubled by the squaring); 2**-17 gives ~an order of
+# magnitude of headroom over that ~5*2**-23 worst case while staying
+# geometrically negligible, and at r^2 == 0 no margin is needed (f32
+# subtraction yields exactly 0 iff the coordinates are bitwise equal).
+_STAB_MARGIN = 1.0 + 2.0**-17
+
+
+def ball_stab_mask(
+    centers: np.ndarray,
+    kth2: np.ndarray,
+    moved: np.ndarray,
+    *,
+    origin,
+    side,
+    l_max: int,
+    exact_rows: int = 64,
+) -> np.ndarray:
+    """Which closed k-th-distance balls does a set of moved points stab?
+
+    Host-side (pure numpy) primitive of the serving layer's spatial cache
+    invalidation (DESIGN.md §16): cached entry *e* — query center
+    ``centers[e]``, squared k-th distance ``kth2[e]`` — can only have
+    changed if some moved row's old or new position lies inside its
+    **closed** ball (inclusive boundary: an object tied at exactly the k-th
+    distance can flip the canonical id tie-break).  Returns an ``(E,)`` bool
+    mask, True = must evict.  The mask is *conservative*: widened by
+    ``_STAB_MARGIN`` against f32 kernel rounding, coarsened to cell
+    granularity on the pyramid path, and clipped positions only merge cells
+    at the region boundary — every approximation adds stabs, never drops
+    one.
+
+    Two regimes, same contract:
+
+    * ``moved`` small (``<= exact_rows``): exact vectorized pairwise check.
+      f64 squared distance of f32 inputs is *exact* (products of f32 are
+      exact in f64 and their sum carries <= 49 significand bits), so only
+      the stored radius needs the margin.
+    * ``moved`` large: a Morton occupancy pyramid over the moved rows'
+      fine cells (the same level-major layout as :func:`_count_pyramid`,
+      booleans instead of counts) and, per ball, the coarsest level whose
+      cell side covers the ball diameter — there the ball's bbox spans at
+      most 2x2 cells, so four occupancy probes decide the stab.
+
+    Non-finite geometry is handled per entry: NaN/inf centers or NaN radius
+    always stab (a NaN-payload geometry key is a legitimate cache key whose
+    ball is undefined — evicting is the only safe answer), and an infinite
+    radius (fewer than k live candidates) stabs on any motion.
+    """
+    centers = np.asarray(centers, np.float64).reshape(-1, 2)
+    kth2 = np.asarray(kth2, np.float64).reshape(-1)
+    moved = np.asarray(moved, np.float64).reshape(-1, 2)
+    E = centers.shape[0]
+    M = moved.shape[0]
+    bad = ~(np.isfinite(centers).all(axis=1) & ~np.isnan(kth2))
+    if E == 0 or M == 0:
+        # no movement to localize, but non-finite geometry (NaN *or* inf
+        # radius) still reports as a stab — the always-evict contract does
+        # not depend on the delta
+        return bad | np.isinf(kth2)
+    r2 = kth2 * _STAB_MARGIN
+    if M <= exact_rows:
+        d2 = (
+            (centers[:, None, 0] - moved[None, :, 0]) ** 2
+            + (centers[:, None, 1] - moved[None, :, 1]) ** 2
+        )
+        return bad | (d2 <= r2[:, None]).any(axis=1)
+    ox, oy = float(np.asarray(origin).reshape(-1)[0]), float(
+        np.asarray(origin).reshape(-1)[1]
+    )
+    side = float(side)
+    n_fine = 1 << l_max
+    # occupancy pyramid over the moved rows' fine cells (clip = boundary
+    # cells, conservative for out-of-region motion)
+    mx = np.clip(np.floor((moved[:, 0] - ox) / side * n_fine), 0, n_fine - 1)
+    my = np.clip(np.floor((moved[:, 1] - oy) / side * n_fine), 0, n_fine - 1)
+    occ_fine = np.zeros((n_fine * n_fine,), bool)
+    occ_fine[_encode_cells_np(mx.astype(np.int64), my.astype(np.int64))] = True
+    levels = [occ_fine]
+    cur = occ_fine
+    for _ in range(l_max):
+        cur = cur.reshape(-1, 4).any(axis=1)
+        levels.append(cur)
+    occ = np.concatenate(list(reversed(levels)))
+    # per ball: coarsest level with cell side >= ball diameter (r == 0 ->
+    # finest; inf radius or any non-finite geometry -> unconditional stab)
+    r = np.sqrt(np.maximum(r2, 0.0))
+    always = bad | np.isinf(r)
+    ok = ~always
+    lvl = np.full((E,), l_max, np.int64)
+    pos_r = ok & (r > 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        want = np.floor(np.log2(side / (2.0 * np.where(pos_r, r, 1.0))))
+    lvl[pos_r] = np.clip(want[pos_r], 0, l_max).astype(np.int64)
+    n_cells = np.int64(1) << lvl
+    off = ((np.int64(1) << (2 * lvl)) - 1) // 3
+
+    def cell(coord, o):
+        c = np.floor((coord - o) / side * n_cells)
+        return np.clip(c, 0, n_cells - 1).astype(np.int64)
+
+    # sanitize the always-stab rows so the int casts below see finite values
+    cx = np.where(ok, centers[:, 0], ox)
+    cy = np.where(ok, centers[:, 1], oy)
+    r = np.where(ok & np.isfinite(r), r, 0.0)
+    xs = (cell(cx - r, ox), cell(cx + r, ox))
+    ys = (cell(cy - r, oy), cell(cy + r, oy))
+    hit = np.zeros((E,), bool)
+    for ix in xs:
+        for iy in ys:
+            hit |= occ[off + _encode_cells_np(ix, iy)]
+    return always | (ok & hit)
 
 
 def _leaf_levels(pyramid: jnp.ndarray, l_max: int, th_quad: int) -> jnp.ndarray:

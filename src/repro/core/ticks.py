@@ -247,6 +247,27 @@ class TickResult:
     # path: nothing moved since the last refresh, reindex elided)
     maintenance: str = "rebuild"
 
+    @property
+    def kth_dist(self):
+        """(Q,) Euclidean k-th distance per query row, or None.
+
+        The radius of each row's result ball — what the serving layer's
+        spatial cache invalidation stores per entry.  Derived from
+        ``nn_dist[:, k-1]`` under ``collect="full"`` (host or device array,
+        matching the result's residency); under ``collect="stats"`` it is
+        the sink's already-reduced ``aggregates.kth_dist`` sliced to the
+        live rows.  None when neither carrier is available.
+        """
+        if self.nn_dist is not None:
+            return self.nn_dist[:, -1]
+        agg = self.aggregates
+        if agg is not None and getattr(agg, "kth_dist", None) is not None:
+            kd = agg.kth_dist
+            if self.qids is not None:
+                kd = kd[: self.qids.shape[0]]
+            return kd
+        return None
+
 
 @partial(
     jax.jit,

@@ -4,9 +4,11 @@ One :class:`KnnServer` admits many tenant sessions and coalesces their
 repeated k-NN queries into ONE shared tick program on one device mesh:
 tenant-tagged rows in a unified registry, deduplicated by exact query
 geometry, quota-checked at registration, fairness-weighted under the
-cost-balanced partitioner, and replayed from an epoch-keyed result cache
-when the object world has not moved.  Per-tenant results are bitwise
-identical to what a solo session would have produced (DESIGN.md §16).
+cost-balanced partitioner, and replayed from an LRU result cache whose
+invalidation is a knob — ``invalidation="epoch"`` clears the store on any
+world movement, ``"spatial"`` evicts only the entries whose k-th-distance
+ball a moved row stabs.  Per-tenant results are bitwise identical to what
+a solo session would have produced (DESIGN.md §16).
 
     spec = ServiceSpec(k=8, side=1000.0, plan="sharded", mesh_shape=8)
     server = KnnServer(spec)
@@ -15,7 +17,7 @@ identical to what a solo session would have produced (DESIGN.md §16).
     bob = server.admit("bob")
     qa = alice.register_queries(alice_qpos)
     qb = bob.register_queries(bob_qpos)
-    bob.update_objects(ids, moved)            # bumps the cache epoch
+    bob.update_objects(ids, moved)            # invalidates affected cache
     tickres = server.submit()                 # one device tick for everyone
     ii, dd, qids = tickres.result_for(qa)
 """

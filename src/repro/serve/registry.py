@@ -43,7 +43,10 @@ class ComputeView:
     ``qpos``/``qid`` are the (U,) unique rows in key-sorted order (rows of
     the ORIGINAL arrays, bit-exact); ``row_to_unique`` maps each logical
     registry row to its unique index; ``keys[u]`` is unique row *u*'s
-    12-byte geometry key (the cache key).
+    12-byte geometry key (the cache key).  ``qpos[u]`` doubles as cache
+    entry *u*'s stab-ball center under spatial invalidation — it must stay
+    the original f32 bits (NOT a re-rounded copy) so the zero-radius stab's
+    bitwise-equality semantics hold.
     """
 
     qpos: np.ndarray

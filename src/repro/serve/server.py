@@ -6,11 +6,18 @@ The dataflow per tick:
    :class:`~repro.serve.registry.TenantRegistry` (tenant-tagged logical
    rows, quota-checked at registration).
 2. ``submit()`` first *observes* any earlier in-flight tick's drift
-   bookkeeping (``KnnSession.finalize_pending``) so a drift rebuild bumps
-   the cache epoch BEFORE the cache is consulted.
+   bookkeeping (``KnnSession.finalize_pending``) so drift decisions land
+   BEFORE the cache is consulted (under ``invalidation="epoch"`` a rebuild
+   bumps the epoch; under ``"spatial"`` it is a no-op — a rebuild re-sorts
+   the SAME positions, so cached entries stay bit-correct).
 3. The registry dedups the logical rows into distinct (geometry, qid) keys
    (:meth:`~repro.serve.registry.TenantRegistry.compute_view`); each unique
-   key is looked up in the epoch-keyed :class:`~repro.serve.cache.ResultCache`.
+   key is looked up in the :class:`~repro.serve.cache.ResultCache`, whose
+   invalidation mode is the server's ``invalidation`` knob: ``"epoch"``
+   clears the store on every delta ingest; ``"spatial"`` evicts only the
+   entries whose closed k-th-distance ball a moved row's old or new
+   position stabs (:func:`repro.core.quadtree.ball_stab_mask`), falling
+   back to the epoch clear above ``stab_budget`` moved rows.
 4. The **miss set** becomes the inner :class:`~repro.api.KnnSession`'s query
    registry (``set_queries`` — only restaged when the miss set actually
    changed), with tenant-fair cost weights
@@ -29,10 +36,11 @@ single-device sweep (DESIGN.md §12/§13), so neither batch composition, nor
 dedup, nor fairness-weighted boundaries, nor cache replay can change a
 row's bits.  The inner session pads with the same
 :func:`repro.core.plan.pad_queries` the solo path uses; a cached entry is
-the bits a solo session produced for that geometry at an epoch whose object
-positions are — by the invalidation contract — still current.  Hence N
-tenants through one server ≡ N solo sessions, row for row (pinned by
-tests/test_serve.py and the property harness).
+the bits a solo session produced for that geometry under object positions
+that are — by the invalidation contract (epoch clear, or the conservative
+closed-ball stab) — still current for that entry.  Hence N tenants through
+one server ≡ N solo sessions, row for row (pinned by tests/test_serve.py
+and the property harness).
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ import numpy as np
 from repro.api.session import KnnSession
 from repro.api.spec import ServiceSpec
 from repro.core.balance import tenant_fair_weights
+from repro.core.quadtree import ball_stab_mask
 
 from .cache import ResultCache
 from .registry import TenantRegistry
@@ -69,9 +78,24 @@ class ServerTickResult:
     of logical rows served WITHOUT fresh device work —
     ``dedup_hit_rows`` (duplicates folded into a computed unique row, any
     collect mode) plus ``cache_hit_rows`` (rows replayed from a previous
-    tick's epoch-valid entry, ``collect="full"`` only).  ``inner`` is the
+    tick's still-valid entry, ``collect="full"`` only).  ``inner`` is the
     underlying session :class:`~repro.core.ticks.TickResult` (None for a
     pure-cache tick that never touched the device).
+
+    ``wall_s`` is the tick's attributable latency, decomposed so that host
+    idle time between ``submit()`` and a lazy ``result()`` (or an
+    overlapped τ+1 submit) never inflates it::
+
+        wall_s = submit_s + drain_s + assemble_s
+
+    * ``submit_s`` — host-side staging inside ``submit()`` (observe +
+      dedup + cache probe + query restage + dispatch), compile excluded;
+    * ``drain_s``  — blocking wait for the device computation
+      (``TickHandle.block_until_ready``) paid by THIS ``result()`` call;
+    * ``assemble_s`` — host materialization + row/cache bookkeeping.
+
+    All three are clamped >= 0; ``compile_s`` (trace+compile, first-shape
+    ticks only) is reported separately, as in the inner session result.
     """
 
     tick: int
@@ -85,6 +109,9 @@ class ServerTickResult:
     wall_s: float
     compile_s: float
     inner: object
+    submit_s: float = 0.0
+    drain_s: float = 0.0
+    assemble_s: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -97,7 +124,8 @@ class ServerTick:
     """One submitted shared tick: the session handle + the row assembly maps."""
 
     def __init__(self, server, tick, handle, view, compute_idx, u_src,
-                 cached_i, cached_d, owner, tenant, qid, epoch, t0):
+                 cached_i, cached_d, owner, tenant, qid, epoch, mutation,
+                 submit_s):
         self._server = server
         self.tick = tick
         self._handle = handle          # session TickHandle | None (pure cache)
@@ -110,8 +138,9 @@ class ServerTick:
         self._tenant = tenant
         self._qid = qid
         self._epoch = epoch            # cache epoch at submit
-        self._t0 = t0
-        self._observed = False         # drift bookkeeping folded into the epoch
+        self._mutation = mutation      # world-mutation counter at submit
+        self._submit_s = submit_s      # staging wall inside submit(), incl compile
+        self._observed = False         # drift bookkeeping folded into the cache
         self._inserted = False
         self._res: ServerTickResult | None = None
         self._inner = None
@@ -126,6 +155,15 @@ class ServerTick:
         srv = self._server
         rebuilt = False
         compile_s = 0.0
+        drain_s = 0.0
+        if self._handle is not None:
+            # drain the device computation in its own timed window: host
+            # idle between submit() and this call is nobody's latency, and
+            # the drain is the only part that scales with device work
+            td = time.perf_counter()
+            self._handle.block_until_ready()
+            drain_s = max(0.0, time.perf_counter() - td)
+        ta = time.perf_counter()
         if self._handle is not None:
             if srv.spec.collect == "full":
                 self._inner = self._handle.result()
@@ -134,21 +172,25 @@ class ServerTick:
             rebuilt = self._inner.rebuilt
             compile_s = self._inner.compile_s
         srv._observe(self)
-        # insert fresh results only if the world has not moved on since
-        # submit: an ingest racing this tick loses cached work, never
-        # poisons the store (cache.py docstring)
+        # insert fresh results only if the world has not MUTATED since
+        # submit (ingest bumps the mutation counter; a drift rebuild — same
+        # positions, new sort order — deliberately does not): an ingest
+        # racing this tick loses cached work, never poisons the store
         if (
             not self._inserted
             and self._inner is not None
             and self._inner.nn_idx is not None
             and srv.spec.collect == "full"
             and srv.cache.enabled
-            and srv.cache.epoch == self._epoch
+            and srv.cache.mutation == self._mutation
         ):
             keys = self._view.keys
+            qpos = self._view.qpos
+            kth = self._inner.kth_dist
             for j, u in enumerate(self._compute_idx):
                 srv.cache.insert(
-                    keys[u], self._inner.nn_idx[j], self._inner.nn_dist[j]
+                    keys[u], self._inner.nn_idx[j], self._inner.nn_dist[j],
+                    center=qpos[u], kth_dist=kth[j],
                 )
             self._inserted = True
         R = int(self._owner.shape[0])
@@ -158,6 +200,10 @@ class ServerTick:
             self._view.row_to_unique, minlength=U
         ) if R else np.zeros((U,), np.int64)
         cache_rows = int(rows_per_u[self._u_src < 0].sum())
+        # compile happens synchronously inside submit() (first-shape
+        # dispatch), so it comes out of the submit window only
+        assemble_s = max(0.0, time.perf_counter() - ta)
+        submit_s = max(0.0, self._submit_s - compile_s)
         self._res = ServerTickResult(
             tick=self.tick,
             epoch=self._epoch,
@@ -167,9 +213,12 @@ class ServerTick:
             dedup_hit_rows=(R - cache_rows) - Uc,
             cache_hit_rows=cache_rows,
             rebuilt=rebuilt,
-            wall_s=time.perf_counter() - self._t0 - compile_s,
+            wall_s=submit_s + drain_s + assemble_s,
             compile_s=compile_s,
             inner=self._inner,
+            submit_s=submit_s,
+            drain_s=drain_s,
+            assemble_s=assemble_s,
         )
         return self._res
 
@@ -236,16 +285,51 @@ class KnnServer:
     (None = unbounded); ``cache_entries`` sizes the result cache (it is
     auto-disabled under ``collect != "full"``, where neighbour lists never
     reach the host — intra-tick dedup still shares device work there).
+
+    ``invalidation`` selects the cache-invalidation mode (DESIGN.md §16):
+
+    * ``"epoch"`` (default) — any delta ingest clears the whole store;
+    * ``"spatial"`` — a delta ingest evicts only entries whose closed
+      k-th-distance ball a moved row's old or new position stabs
+      (:func:`repro.core.quadtree.ball_stab_mask`); deltas larger than
+      ``stab_budget`` rows fall back to the epoch clear, and deltas up to
+      ``stab_exact_rows`` use the exact pairwise check instead of the
+      Morton cell-ball cover.  Requires a host mirror of object positions
+      (kept only in this mode, refreshed per ingest) to recover each moved
+      row's OLD position without a device round-trip.
+
+    In both modes drift rebuilds leave the cache alone as a *store of
+    inserts*: the insert guard is keyed on the world-mutation counter
+    (bumped by ingests only), so a rebuilt tick's own fresh results are
+    kept — a rebuild re-sorts the same positions and cannot change any
+    row's bits.  Under ``"epoch"`` a rebuild still bumps the epoch (the
+    historical conservative hygiene, observable in ``cache.epoch``); under
+    ``"spatial"`` it is a no-op.
     """
 
     def __init__(self, spec: ServiceSpec, *, max_tenants: int | None = None,
                  default_quota: int | None = None, cache_entries: int = 65536,
-                 fair_share: bool = True):
+                 fair_share: bool = True, invalidation: str = "epoch",
+                 stab_budget: int = 4096, stab_exact_rows: int = 64):
+        if invalidation not in ("epoch", "spatial"):
+            raise ValueError(
+                f"invalidation must be 'epoch' or 'spatial', got "
+                f"{invalidation!r}"
+            )
+        if stab_budget < 0 or stab_exact_rows < 0:
+            raise ValueError("stab_budget and stab_exact_rows must be >= 0")
         self.spec = spec
         self.session = KnnSession(spec)
         self.cache = ResultCache(
             capacity=cache_entries if spec.collect == "full" else 0
         )
+        self.invalidation = invalidation
+        self.stab_budget = int(stab_budget)
+        self.stab_exact_rows = int(stab_exact_rows)
+        # host mirror of object positions (spatial mode + enabled cache
+        # only): the stab needs each moved row's OLD position, and reading
+        # it back from the device would serialize ingest on the tick queue
+        self._world: np.ndarray | None = None
         self.fair_share = fair_share
         self.max_tenants = max_tenants
         self.default_quota = default_quota
@@ -281,7 +365,8 @@ class KnnServer:
         return (
             f"server tenants={len(self._tenants)} rows={self.query_count} "
             f"cache={'off' if not self.cache.enabled else self.cache.capacity} "
-            f"epoch={self.cache.epoch} | {self.session.plan.describe()}"
+            f"inval={self.invalidation} epoch={self.cache.epoch} | "
+            f"{self.session.plan.describe()}"
         )
 
     # ------------------------------------------------------------ admission
@@ -315,17 +400,85 @@ class KnnServer:
         tenant.live = False
 
     # ------------------------------------------------------------ world state
+    @property
+    def _mirror_world(self) -> bool:
+        return self.invalidation == "spatial" and self.cache.enabled
+
     def ingest_objects(self, positions):
-        """Seed/replace the SHARED object world (snapshot path); bumps epoch."""
+        """Seed/replace the SHARED object world (snapshot path); bumps epoch.
+
+        A snapshot replaces every position, so both modes clear the store
+        (a stab against N moved rows is the epoch clear's work for no
+        savings).
+        """
         self.session.ingest_objects(positions)
+        self.cache.bump_mutation()
         self.cache.bump_epoch("snapshot-ingest")
+        if self._mirror_world:
+            self._world = np.array(positions, np.float32).reshape(-1, 2)
 
     def _ingest_delta(self, tenant: TenantHandle, ids, positions):
-        m = np.asarray(ids).reshape(-1).shape[0]
+        ids_a = np.asarray(ids, np.int64).reshape(-1)
+        m = ids_a.shape[0]
+        # the session validates ids/shapes first — an invalid delta must
+        # not invalidate anything
         self.session.update_objects(ids, positions)
-        if m:
-            tenant.deltas_fed += m
+        if not m:
+            return
+        tenant.deltas_fed += m
+        self.cache.bump_mutation()
+        if self.invalidation == "spatial":
+            self._invalidate_delta(
+                ids_a, np.asarray(positions, np.float32).reshape(-1, 2),
+                tenant.name,
+            )
+        else:
             self.cache.bump_epoch(f"delta-ingest:{tenant.name}")
+
+    def _invalidate_delta(self, ids: np.ndarray, new_pos: np.ndarray,
+                          name: str):
+        """Spatial invalidation for one delta batch (already validated).
+
+        Evicts exactly the entries whose closed k-th ball contains a moved
+        row's old (host mirror) or new position; a batch over
+        ``stab_budget`` rows falls back to the epoch clear (reason
+        ``stab-budget:<tenant>``).  The mirror is updated keep-last per id,
+        matching the session's scatter semantics, BEFORE the early returns
+        so it never goes stale.
+        """
+        cache = self.cache
+        if not cache.enabled:
+            return
+        # keep-last dedup: only the last occurrence of an id lands, and its
+        # old position is the pre-batch mirror value (intermediate
+        # positions within one batch never exist on device)
+        _, keep_rev = np.unique(ids[::-1], return_index=True)
+        sel = ids.shape[0] - 1 - keep_rev
+        ids_u = ids[sel]
+        new_u = new_pos[sel]
+        if self._world is None:
+            # no snapshot observed since spatial mode needed it (shouldn't
+            # happen: ingest precedes deltas) — conservative full clear
+            cache.bump_epoch(f"stab-nomirror:{name}")
+            return
+        old_u = self._world[ids_u].copy()
+        self._world[ids_u] = new_u
+        if ids_u.shape[0] > self.stab_budget:
+            cache.bump_epoch(f"stab-budget:{name}")
+            return
+        keys, centers, kth2 = cache.geometry()
+        if not keys:
+            cache.last_invalidation = f"delta-stab:{name}"
+            return
+        mask = ball_stab_mask(
+            centers, kth2, np.concatenate([old_u, new_u]),
+            origin=np.asarray(self.spec.origin, np.float64),
+            side=self.spec.side, l_max=self.spec.l_max,
+            exact_rows=self.stab_exact_rows,
+        )
+        cache.evict_keys(
+            [k for k, m in zip(keys, mask) if m], f"delta-stab:{name}"
+        )
 
     # ------------------------------------------------------------ queries
     def _register_queries(self, tenant: TenantHandle, qpos, qid, *,
@@ -365,21 +518,25 @@ class KnnServer:
 
     # ------------------------------------------------------------ serving
     def _observe(self, st: ServerTick):
-        """Fold one finalized tick's drift decision into the cache epoch.
+        """Fold one finalized tick's drift decision into the cache.
 
         A drift rebuild re-sorts the SAME positions, so already-cached
-        entries are still bit-correct — the bump is the conservative hygiene
-        the epoch contract promises (ISSUE: "any delta ingest or drift
-        rebuild bumps the epoch").  The initial lazy build (``rebuilt_pre``
-        of tick 0) is not a drift decision and does not bump.
+        entries are still bit-correct.  Under ``invalidation="epoch"`` the
+        bump is the historical conservative hygiene; under ``"spatial"``
+        nothing happens — no position changed, no ball was stabbed.  In
+        BOTH modes the rebuild leaves the world-mutation counter alone, so
+        the rebuilt tick's own fresh inserts are kept (the insert guard
+        keys on mutation, not epoch).  The initial lazy build
+        (``rebuilt_pre`` of tick 0) is not a drift decision and does not
+        bump.
         """
         if st._observed:
             return
         h = st._handle
-        if h is not None and not (h._finalized or h._result is not None):
+        if h is not None and not h.finalized:
             return  # not finalized yet; observed again later
         st._observed = True
-        if h is not None and h._rebuilt_post:
+        if h is not None and h.rebuilt_post and self.invalidation == "epoch":
             self.cache.bump_epoch("drift-rebuild")
 
     def submit(self) -> ServerTick:
@@ -424,6 +581,7 @@ class KnnServer:
             cached_i = np.zeros((0, k), np.int32)
             cached_d = np.zeros((0, k), np.float32)
         epoch = self.cache.epoch
+        mutation = self.cache.mutation
         handle = None
         if compute_idx.size:
             sig = b"".join(view.keys[u] for u in compute_idx)
@@ -452,7 +610,8 @@ class KnnServer:
             self, self._tick, handle, view, compute_idx, u_src,
             cached_i, cached_d,
             self._registry.owner.copy(), self._registry.tenant.copy(),
-            self._registry.qid.copy(), epoch, t0,
+            self._registry.qid.copy(), epoch, mutation,
+            time.perf_counter() - t0,
         )
         self._tick += 1
         self._inflight.append(st)

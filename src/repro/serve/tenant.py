@@ -106,7 +106,9 @@ class TenantHandle:
         All tenants observe one moving-object population; the delta rides
         the session's device-side scatter
         (:meth:`repro.api.KnnSession.update_objects`) and — because the
-        world changed — bumps the result-cache epoch.
+        world changed — invalidates the result cache: the whole store
+        under ``invalidation="epoch"``, only the stabbed entries under
+        ``"spatial"`` (DESIGN.md §16).
         """
         self._check_live()
         self._server._ingest_delta(self, ids, positions)

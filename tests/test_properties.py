@@ -336,12 +336,15 @@ def test_server_axis_bit_identical(seed, family, dup_every, zipf_a):
     strategies as the rest of the harness).  The motion script hits the
     serving layer's interesting transitions: tick 0 computes fresh and
     populates the cache; tick 1 has NO motion, so the whole tick must
-    replay from the epoch-valid cache (asserted: zero computed rows); tick
-    2's delta — fed through ONE tenant's ingest into the shared world —
-    bumps the epoch and forces a full recompute.  Each tenant's rows are
-    then compared bitwise against a solo session replaying the same world
-    script, for every grid cell.  Shapes are held fixed so the jit cache
-    is shared across examples and cells.
+    replay from the cache (asserted: zero computed rows); tick 2's delta —
+    fed through ONE tenant's ingest into the shared world — invalidates
+    (everything under ``invalidation="epoch"``; exactly the stabbed balls
+    under ``"spatial"``, where surviving entries keep serving).  Both
+    invalidation modes run the same script, and each tenant's rows are
+    compared bitwise against a solo session replaying the same world
+    script, for every grid cell — so under churn every cache-surviving
+    entry is pinned bitwise equal to a cold recomputation.  Shapes are
+    held fixed so the jit cache is shared across examples and cells.
     """
     from repro.api import KnnSession, ServiceSpec
     from repro.serve import KnnServer
@@ -363,20 +366,24 @@ def test_server_axis_bit_identical(seed, family, dup_every, zipf_a):
         spec = ServiceSpec(k=k, window=16, chunk=32, l_max=5, th_quad=8,
                            side=SIDE, plan=plan, mesh_shape=mesh,
                            partitioner=part)
-        srv = KnnServer(spec)
-        srv.ingest_objects(pts)
-        tenants = [srv.admit(f"t{g}") for g in range(3)]
-        handles = [t.register_queries(*tq[g])
-                   for g, t in enumerate(tenants)]
-        got = []
-        for t in range(3):
-            if t == 2:
-                tenants[1].update_objects(ids, new)
-            st = srv.submit()
-            res = st.result()
-            if t == 1:  # unchanged world: full cache replay, no device work
-                assert res.rows_computed == 0, (plan, part, res)
-            got.append([st.result_for(h) for h in handles])
+        got = {}
+        for invalidation in ("epoch", "spatial"):
+            srv = KnnServer(spec, invalidation=invalidation)
+            srv.ingest_objects(pts)
+            tenants = [srv.admit(f"t{g}") for g in range(3)]
+            handles = [t.register_queries(*tq[g])
+                       for g, t in enumerate(tenants)]
+            ticks = []
+            for t in range(3):
+                if t == 2:
+                    tenants[1].update_objects(ids, new)
+                st = srv.submit()
+                res = st.result()
+                if t == 1:  # unchanged world: full cache replay
+                    assert res.rows_computed == 0, (
+                        plan, part, invalidation, res)
+                ticks.append([st.result_for(h) for h in handles])
+            got[invalidation] = ticks
         for g, (qpos, qid) in enumerate(tq):
             sess = KnnSession(spec)
             sess.ingest_objects(pts)
@@ -384,12 +391,13 @@ def test_server_axis_bit_identical(seed, family, dup_every, zipf_a):
             want = [sess.submit().result()]
             sess.update_objects(ids, new)
             want.append(sess.submit().result())
-            for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
-                tag = f"{plan}/{part}/t{g}/tick{srv_t}"
-                np.testing.assert_array_equal(
-                    got[srv_t][g][0], want[solo_t].nn_idx, err_msg=tag)
-                np.testing.assert_array_equal(
-                    got[srv_t][g][1], want[solo_t].nn_dist, err_msg=tag)
+            for inval, ticks in got.items():
+                for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
+                    tag = f"{plan}/{part}/{inval}/t{g}/tick{srv_t}"
+                    np.testing.assert_array_equal(
+                        ticks[srv_t][g][0], want[solo_t].nn_idx, err_msg=tag)
+                    np.testing.assert_array_equal(
+                        ticks[srv_t][g][1], want[solo_t].nn_dist, err_msg=tag)
 
 
 @pytest.mark.parametrize("r", [2, 3, 8])

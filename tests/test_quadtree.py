@@ -7,7 +7,7 @@ except ModuleNotFoundError:  # offline container: deterministic fallback shim
     from repro.testing import given, settings, strategies as st
 
 from repro.core import build_index, leaf_of_points, reindex_objects
-from repro.core.quadtree import pyramid_offset
+from repro.core.quadtree import ball_stab_mask, pyramid_offset
 
 
 def _index(pts, l_max=5, th=8):
@@ -98,3 +98,93 @@ def test_reindex_keeps_partition_updates_objects():
     # sorted by fine code
     codes = np.asarray(idx2.codes)
     assert (np.diff(codes) >= 0).all()
+
+
+# ---------------------------------------------- ball_stab_mask (serve cache)
+
+
+def _exact_stab(centers, kth2, moved):
+    """Reference O(E*M) closed-ball stab in f64 (margin-free)."""
+    c = np.asarray(centers, np.float64)
+    m = np.asarray(moved, np.float64)
+    d2 = ((c[:, None, :] - m[None, :, :]) ** 2).sum(axis=2)
+    return (d2 <= np.asarray(kth2, np.float64)[:, None]).any(axis=1)
+
+
+def test_ball_stab_exact_path_inclusive_boundary():
+    centers = np.array([[100.0, 100.0], [900.0, 900.0]], np.float32)
+    kth2 = np.array([25.0, 4.0], np.float64)
+    moved = np.array([[105.0, 100.0],  # distance EXACTLY 5 from entry 0
+                      [500.0, 500.0]], np.float32)
+    got = ball_stab_mask(centers, kth2, moved,
+                         origin=(0.0, 0.0), side=1000.0, l_max=5)
+    np.testing.assert_array_equal(got, [True, False])
+    # a hair outside the (margin-widened) boundary does not stab
+    moved2 = np.array([[105.1, 100.0]], np.float32)
+    got2 = ball_stab_mask(centers, kth2, moved2,
+                          origin=(0.0, 0.0), side=1000.0, l_max=5)
+    np.testing.assert_array_equal(got2, [False, False])
+
+
+def test_ball_stab_zero_radius_needs_bitwise_equal_position():
+    centers = np.array([[100.0, 100.0]], np.float32)
+    kth2 = np.array([0.0], np.float64)
+    same = np.array([[100.0, 100.0]], np.float32)
+    near = np.array([[100.0 + 2.0**-10, 100.0]], np.float32)
+    assert ball_stab_mask(centers, kth2, same,
+                          origin=(0.0, 0.0), side=1000.0, l_max=5)[0]
+    assert not ball_stab_mask(centers, kth2, near,
+                              origin=(0.0, 0.0), side=1000.0, l_max=5)[0]
+
+
+def test_ball_stab_nonfinite_geometry_always_stabs():
+    centers = np.array([[np.nan, 5.0], [5.0, 5.0], [5.0, 5.0], [5.0, 5.0]],
+                       np.float32)
+    kth2 = np.array([1.0, np.nan, np.inf, 1.0], np.float64)
+    far = np.array([[900.0, 900.0]], np.float32)
+    got = ball_stab_mask(centers, kth2, far,
+                         origin=(0.0, 0.0), side=1000.0, l_max=5)
+    # NaN center, NaN radius, inf radius (under-full query) all evict;
+    # the one well-formed ball survives far motion
+    np.testing.assert_array_equal(got, [True, True, True, False])
+    # ...and non-finite geometry stabs even with NO movement to blame
+    got0 = ball_stab_mask(centers, kth2, np.empty((0, 2), np.float32),
+                          origin=(0.0, 0.0), side=1000.0, l_max=5)
+    np.testing.assert_array_equal(got0, [True, True, True, False])
+
+
+def test_ball_stab_empty_entries():
+    got = ball_stab_mask(np.empty((0, 2), np.float32), np.empty((0,)),
+                         np.array([[1.0, 1.0]], np.float32),
+                         origin=(0.0, 0.0), side=1000.0, l_max=5)
+    assert got.shape == (0,)
+
+
+def test_ball_stab_pyramid_path_covers_exact():
+    """The coarse Morton-pyramid regime (moved > exact_rows) must be a
+    superset of the exact stab — cell granularity and boundary clipping
+    may add evictions, never drop one — including out-of-region movers."""
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        E = int(rng.integers(1, 40))
+        M = int(rng.integers(9, 120))  # > exact_rows=8 forces the pyramid
+        centers = rng.uniform(0, 1000, (E, 2)).astype(np.float32)
+        r = rng.uniform(0, 200, (E,))
+        kth2 = (r ** 2).astype(np.float64)
+        moved = rng.uniform(-100, 1100, (M, 2)).astype(np.float32)
+        coarse = ball_stab_mask(centers, kth2, moved, origin=(0.0, 0.0),
+                                side=1000.0, l_max=5, exact_rows=8)
+        exact = _exact_stab(centers, kth2, moved)
+        assert not (exact & ~coarse).any(), (trial, "coarse dropped a stab")
+
+
+def test_ball_stab_pyramid_path_keeps_disjoint_entries():
+    """Coarseness is bounded: movers confined to one corner leave a
+    far-corner ball alone even on the pyramid path."""
+    centers = np.array([[900.0, 900.0]], np.float32)
+    kth2 = np.array([100.0], np.float64)  # radius 10 ball at (900, 900)
+    rng = np.random.default_rng(8)
+    moved = rng.uniform(0, 100, (64, 2)).astype(np.float32)
+    got = ball_stab_mask(centers, kth2, moved, origin=(0.0, 0.0),
+                         side=1000.0, l_max=5, exact_rows=8)
+    assert not got[0]

@@ -408,6 +408,339 @@ def test_cache_no_cross_tenant_mutation():
     np.testing.assert_array_equal(ii_b2, want_i)
 
 
+# --------------------------------------------- spatial invalidation mode
+
+
+def _ball_world():
+    """A controlled world: 4 axis-aligned neighbours around a hotspot query
+    at (1000, 1000) — exact integer distances 1..4, so the cached k=4 ball
+    has squared radius EXACTLY 16.0 in f32 — plus far-corner filler."""
+    pts = np.array(
+        [[1001.0, 1000.0],   # id 0, d2 = 1
+         [1002.0, 1000.0],   # id 1, d2 = 4
+         [1003.0, 1000.0],   # id 2, d2 = 9
+         [1000.0, 1004.0],   # id 3, d2 = 16  (the k-th neighbour)
+         [20000.0, 20000.0],  # id 4: the mover, starts far away
+         [21000.0, 20000.0],
+         [20000.0, 21000.0],
+         [21000.0, 21000.0]], np.float32)
+    q = np.array([[1000.0, 1000.0]], np.float32)
+    return pts, q
+
+
+def _one_delta_solo(spec, pts, q, qid, ids, new):
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(q, qid)
+    r0 = sess.submit().result()
+    sess.update_objects(ids, new)
+    r1 = sess.submit().result()
+    return r0, r1
+
+
+def test_spatial_survives_unrelated_motion():
+    """The tentpole acceptance scenario on the local device count: hotspot
+    queries disjoint from the delta region keep serving from the cache
+    across delta-ingesting ticks under spatial invalidation (epoch mode
+    drops to zero), every served row bitwise equal to cold recomputation."""
+    rng = np.random.default_rng(80)
+    pts = rng.uniform(0, SIDE, (256, 2)).astype(np.float32)
+    ids = np.arange(200, 232, dtype=np.int32)
+    pts[ids] = rng.uniform(20000, 22000, (32, 2)).astype(np.float32)
+    q = rng.uniform(0, 800, (8, 2)).astype(np.float32)  # far-corner hotspot
+    deltas = [rng.uniform(20000, 22000, (32, 2)).astype(np.float32)
+              for _ in range(2)]
+    spec = _spec()
+
+    # solo reference across the same world script
+    sess = KnnSession(spec)
+    sess.ingest_objects(pts)
+    sess.register_queries(q)
+    want = [sess.submit().result()]
+    for new in deltas:
+        sess.update_objects(ids, new)
+        want.append(sess.submit().result())
+
+    for mode, expect_cached in (("epoch", False), ("spatial", True)):
+        srv = KnnServer(spec, invalidation=mode)
+        srv.ingest_objects(pts)
+        t = srv.admit("a")
+        h = t.register_queries(q)
+        for tick in range(3):
+            if tick:
+                t.update_objects(ids, deltas[tick - 1])
+            st = srv.submit()
+            res = st.result()
+            ii, dd, _ = st.result_for(h)
+            np.testing.assert_array_equal(ii, want[tick].nn_idx,
+                                          err_msg=f"{mode}/tick{tick}")
+            np.testing.assert_array_equal(dd, want[tick].nn_dist,
+                                          err_msg=f"{mode}/tick{tick}")
+            if tick:  # the delta-ingesting ticks
+                if expect_cached:
+                    assert res.rows_computed == 0 and res.hit_rate > 0, (
+                        mode, tick, res)
+                    assert srv.cache.last_invalidation == "delta-stab:a"
+                else:
+                    assert res.cache_hit_rows == 0, (mode, tick, res)
+
+
+def test_spatial_ball_enter_leave_and_unrelated():
+    """Per-entry eviction edges: a mover entering the cached k-th ball
+    evicts, a mover leaving it evicts (its OLD position stabs), and far
+    motion leaves the entry serving — with solo-exact bits throughout."""
+    pts, q = _ball_world()
+    spec = _spec()
+    srv = KnnServer(spec, invalidation="spatial")
+    srv.ingest_objects(pts)
+    t = srv.admit("a")
+    h = t.register_queries(q)
+    st = srv.submit()
+    st.result()
+    mover = np.array([4], np.int32)
+    script = [
+        # (new position, must_evict)
+        (np.array([[20001.0, 20000.0]], np.float32), False),  # far -> far
+        (np.array([[1000.0, 1002.0]], np.float32), True),     # ENTERS ball
+        (np.array([[18000.0, 18000.0]], np.float32), True),   # LEAVES ball
+        (np.array([[18000.0, 17000.0]], np.float32), False),  # far again
+    ]
+    world = pts.copy()
+    for new, must_evict in script:
+        sess = KnnSession(spec)
+        sess.ingest_objects(world)
+        sess.register_queries(q)
+        sess.submit().result()
+        sess.update_objects(mover, new)
+        want = sess.submit().result()
+        world[mover] = new
+        t.update_objects(mover, new)
+        st = srv.submit()
+        res = st.result()
+        ii, dd, _ = st.result_for(h)
+        np.testing.assert_array_equal(ii, want.nn_idx, err_msg=str(new))
+        np.testing.assert_array_equal(dd, want.nn_dist, err_msg=str(new))
+        assert res.rows_computed == (1 if must_evict else 0), (new, res)
+
+
+def test_spatial_exact_kth_distance_tie_evicts():
+    """Motion to EXACTLY the k-th distance flips the canonical selection:
+    ties break to the lowest id, so a low-id mover landing at d2 == kth2
+    displaces the high-id incumbent.  The inclusive <= ball boundary is
+    what catches it — an exclusive stab would serve a stale row."""
+    pts = np.array(
+        [[1001.0, 1000.0],    # id 0, d2 = 1
+         [20000.0, 20000.0],  # id 1: the mover, starts far away
+         [1002.0, 1000.0],    # id 2, d2 = 4
+         [1003.0, 1000.0],    # id 3, d2 = 9
+         [1000.0, 1004.0],    # id 4, d2 = 16 — the incumbent k-th
+         [21000.0, 21000.0],
+         [20000.0, 21000.0],
+         [21000.0, 20500.0]], np.float32)
+    q = np.array([[1000.0, 1000.0]], np.float32)
+    spec = _spec()
+    srv = KnnServer(spec, invalidation="spatial")
+    srv.ingest_objects(pts)
+    t = srv.admit("a")
+    h = t.register_queries(q)
+    st0 = srv.submit()
+    st0.result()
+    i0, _, _ = st0.result_for(h)
+    assert 4 in i0[0] and 1 not in i0[0]
+    # id 1 moves to d2 EXACTLY 16 (= the cached kth2): tie with id 4,
+    # lowest id wins -> membership flips even though no distance shrank
+    new = np.array([[996.0, 1000.0]], np.float32)
+    t.update_objects(np.array([1], np.int32), new)
+    st1 = srv.submit()
+    res = st1.result()
+    assert res.rows_computed == 1, res  # the boundary stab evicted
+    i1, d1, _ = st1.result_for(h)
+    world = pts.copy()
+    world[1] = new
+    sess = KnnSession(spec)
+    sess.ingest_objects(world)
+    sess.register_queries(q)
+    want = sess.submit().result()
+    np.testing.assert_array_equal(i1, want.nn_idx)
+    np.testing.assert_array_equal(d1, want.nn_dist)
+    assert 1 in i1[0] and 4 not in i1[0]
+
+
+def test_spatial_mover_is_excluded_qid():
+    """A mover that is some query's excluded qid: its motion cannot change
+    that query's rows (it is excluded by definition), the conservative stab
+    may still evict — either way the served bits must equal recomputation."""
+    pts, q = _ball_world()
+    spec = _spec()
+    qid = np.array([4], np.int32)  # the mover IS this query's exclusion
+    srv = KnnServer(spec, invalidation="spatial")
+    srv.ingest_objects(pts)
+    t = srv.admit("a")
+    h = t.register_queries(q, qid)
+    st0 = srv.submit()
+    st0.result()
+    i0, d0, _ = st0.result_for(h)
+    # id 4 jumps INTO the ball: the stab evicts (conservative), but the
+    # recomputed rows are identical — id 4 is excluded from its own list
+    new = np.array([[1000.0, 1001.0]], np.float32)
+    r0, r1 = _one_delta_solo(spec, pts, q, qid, np.array([4], np.int32), new)
+    t.update_objects(np.array([4], np.int32), new)
+    st1 = srv.submit()
+    st1.result()
+    i1, d1, _ = st1.result_for(h)
+    np.testing.assert_array_equal(i1, r1.nn_idx)
+    np.testing.assert_array_equal(d1, r1.nn_dist)
+    np.testing.assert_array_equal(i1, i0)  # exclusion: rows truly unchanged
+    np.testing.assert_array_equal(d1, d0)
+
+
+def test_spatial_negative_zero_geometry_keys():
+    """-0.0 and 0.0 are distinct cache keys (bit-pattern keying) with the
+    same geometry: both survive unrelated motion as separate entries and
+    both serve bitwise-correct rows."""
+    rng = np.random.default_rng(81)
+    pts = rng.uniform(10000, SIDE, (64, 2)).astype(np.float32)
+    q = np.array([[0.0, 5.0], [-0.0, 5.0]], np.float32)
+    assert q[0].tobytes() != q[1].tobytes()
+    spec = _spec()
+    srv = KnnServer(spec, invalidation="spatial")
+    srv.ingest_objects(pts)
+    t = srv.admit("a")
+    h = t.register_queries(q)
+    r0 = srv.submit().result()
+    assert r0.rows_unique == 2 and len(srv.cache) == 2
+    ids = np.array([0], np.int32)
+    new = rng.uniform(10000, SIDE, (1, 2)).astype(np.float32)
+    t.update_objects(ids, new)
+    st = srv.submit()
+    res = st.result()
+    assert res.rows_computed == 0 and len(srv.cache) == 2, res
+    ii, dd, _ = st.result_for(h)
+    world = pts.copy()
+    world[0] = new
+    sess = KnnSession(spec)
+    sess.ingest_objects(world)
+    sess.register_queries(q)
+    want = sess.submit().result()
+    np.testing.assert_array_equal(ii, want.nn_idx)
+    np.testing.assert_array_equal(dd, want.nn_dist)
+
+
+def test_spatial_stab_budget_falls_back_to_epoch_clear():
+    """Deltas over stab_budget rows give up on stabbing: full epoch clear
+    (reason tagged stab-budget), then normal recompute with correct bits."""
+    rng = np.random.default_rng(82)
+    pts = rng.uniform(0, SIDE, (64, 2)).astype(np.float32)
+    q = rng.uniform(0, SIDE, (4, 2)).astype(np.float32)
+    spec = _spec()
+    srv = KnnServer(spec, invalidation="spatial", stab_budget=4)
+    srv.ingest_objects(pts)
+    t = srv.admit("a")
+    h = t.register_queries(q)
+    srv.submit().result()
+    assert len(srv.cache) == 4
+    e0 = srv.cache.epoch
+    ids = rng.choice(64, 8, replace=False).astype(np.int32)  # 8 > budget 4
+    new = rng.uniform(0, SIDE, (8, 2)).astype(np.float32)
+    t.update_objects(ids, new)
+    assert srv.cache.last_invalidation == "stab-budget:a"
+    assert srv.cache.epoch == e0 + 1 and len(srv.cache) == 0
+    st = srv.submit()
+    res = st.result()
+    assert res.rows_computed == res.rows_unique and res.cache_hit_rows == 0
+    ii, dd, _ = st.result_for(h)
+    world = pts.copy()
+    world[ids] = new
+    sess = KnnSession(spec)
+    sess.ingest_objects(world)
+    sess.register_queries(q)
+    want = sess.submit().result()
+    np.testing.assert_array_equal(ii, want.nn_idx)
+    np.testing.assert_array_equal(dd, want.nn_dist)
+
+
+def test_rebuilt_tick_inserts_survive_in_both_modes():
+    """The rebuild-cliff fix: a drift-rebuilt tick's own fresh results are
+    inserted (the insert guard keys on the world-mutation counter, which
+    rebuilds don't touch), so the next no-motion tick replays fully from
+    the cache — in BOTH invalidation modes.  Before the fix the epoch guard
+    silently dropped those inserts every rebuild."""
+    n = 2000
+    rng = np.random.default_rng(83)
+    uniform = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    clustered = (rng.normal(0, 60, (n, 2)) + 11_250).astype(
+        np.float32).clip(0, SIDE - 1)
+    spec = _spec(k=8, th_quad=32, l_max=6, window=64, chunk=512,
+                 rebuild_factor=1.5)
+    for mode in ("epoch", "spatial"):
+        srv = KnnServer(spec, invalidation=mode)
+        srv.ingest_objects(uniform)
+        a = srv.admit("alice")
+        ha = a.register_queries(uniform[:64], np.arange(64, dtype=np.int32))
+        srv.submit().result()
+        srv.submit().result()  # work-at-build anchor
+        a.update_objects(np.arange(n, dtype=np.int32), clustered)
+        r_drift = srv.submit().result()
+        assert r_drift.rebuilt, mode
+        assert len(srv.cache) > 0, mode  # the rebuilt tick's own inserts
+        r_next = srv.submit().result()  # no motion since
+        assert r_next.rows_computed == 0 and r_next.cache_hit_rows > 0, (
+            mode, r_next)
+        st = srv.submit()
+        ii, dd, _ = st.result_for(ha)
+        sess = KnnSession(spec)
+        sess.ingest_objects(uniform)
+        sess.register_queries(uniform[:64], np.arange(64, dtype=np.int32))
+        sess.submit().result()
+        sess.submit().result()
+        sess.update_objects(np.arange(n, dtype=np.int32), clustered)
+        want = sess.submit().result()
+        assert want.rebuilt
+        np.testing.assert_array_equal(ii, want.nn_idx, err_msg=mode)
+        np.testing.assert_array_equal(dd, want.nn_dist, err_msg=mode)
+
+
+# ------------------------------------------- latency accounting + handles
+
+
+def test_server_tick_wall_s_excludes_host_idle():
+    """wall_s = submit_s + drain_s + assemble_s, all >= 0 — host idle
+    between submit() and a lazy result() must not inflate the tick's
+    latency (it used to: wall_s was measured submit-to-materialize)."""
+    import time as _time
+
+    srv = KnnServer(_spec())
+    srv.ingest_objects(_world(128, seed=90))
+    t = srv.admit("a")
+    t.register_queries(_world(8, 91))
+    srv.submit().result()  # warm the compile cache
+    st = srv.submit()
+    _time.sleep(0.3)  # host idle the old accounting charged to the tick
+    res = st.result()
+    assert res.compile_s == 0.0
+    assert res.wall_s < 0.25, res.wall_s
+    assert res.submit_s >= 0 and res.drain_s >= 0 and res.assemble_s >= 0
+    assert res.wall_s == res.submit_s + res.drain_s + res.assemble_s
+
+
+def test_tick_handle_public_finalized_rebuilt_post():
+    """The server's drift observation runs on TickHandle's public
+    read-only properties, not session privates."""
+    sess = KnnSession(_spec())
+    sess.ingest_objects(_world(64, seed=92))
+    sess.register_queries(_world(4, 93))
+    h = sess.submit()
+    assert h.finalized is False  # not finalized until result/next submit
+    assert h.rebuilt_post is False
+    h.result()
+    assert h.finalized is True
+    assert h.rebuilt_post is False  # no drift in a static world
+    with pytest.raises(AttributeError):
+        h.finalized = True
+    with pytest.raises(AttributeError):
+        h.rebuilt_post = True
+
+
 # ------------------------------------------------------- collect="stats"
 
 def test_collect_stats_dedup_without_cache():
@@ -460,8 +793,10 @@ def test_result_for_errors():
 def test_server_solo_parity_on_8_devices():
     """3 tenants through one server on a real 8-device grid == solo sessions,
     bitwise, for the mesh plans under cost_balanced — with a delta tick and a
-    cache-replay tick in the script.  Subprocess because the device count
-    must be set before jax init."""
+    cache-replay tick in the script, in BOTH invalidation modes — plus the
+    spatial acceptance pin: localized churn keeps a disjoint hotspot served
+    entirely from cache on the delta tick.  Subprocess because the device
+    count must be set before jax init."""
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -479,23 +814,18 @@ tq = [np.concatenate([shared, rng.uniform(0, SIDE, (8, 2)).astype(np.float32)])
 ids = rng.choice(512, 32, replace=False).astype(np.int32)
 new = rng.uniform(0, SIDE, (32, 2)).astype(np.float32)
 
+# localized-churn world: hotspot queries in one corner, all movers far away
+pts2 = rng.uniform(0, SIDE, (512, 2)).astype(np.float32)
+far_ids = np.arange(400, 432, dtype=np.int32)
+pts2[far_ids] = rng.uniform(20000, 22000, (32, 2)).astype(np.float32)
+far_new = rng.uniform(20000, 22000, (32, 2)).astype(np.float32)
+hotq = rng.uniform(0, 800, (8, 2)).astype(np.float32)
+
 for plan, mesh in (("sharded", 8), ("hybrid", (2, 4))):
     spec = ServiceSpec(k=4, th_quad=8, l_max=5, window=16, chunk=32,
                        side=SIDE, plan=plan, mesh_shape=mesh,
                        partitioner="cost_balanced")
-    srv = KnnServer(spec)
-    srv.ingest_objects(pts)
-    tenants = [srv.admit(f"t{i}") for i in range(3)]
-    handles = [t.register_queries(tq[i]) for i, t in enumerate(tenants)]
-    got = []
-    for t in range(3):
-        if t == 2:
-            tenants[1].update_objects(ids, new)
-        st = srv.submit()
-        res = st.result()
-        if t == 1:
-            assert res.rows_computed == 0, (plan, res)  # cache replay
-        got.append([st.result_for(h) for h in handles])
+    want_all = []
     for i in range(3):
         sess = KnnSession(spec)
         sess.ingest_objects(pts)
@@ -503,11 +833,52 @@ for plan, mesh in (("sharded", 8), ("hybrid", (2, 4))):
         want = [sess.submit().result()]
         sess.update_objects(ids, new)
         want.append(sess.submit().result())
-        for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
-            np.testing.assert_array_equal(
-                got[srv_t][i][0], want[solo_t].nn_idx, err_msg=f"{plan}/t{i}")
-            np.testing.assert_array_equal(
-                got[srv_t][i][1], want[solo_t].nn_dist, err_msg=f"{plan}/t{i}")
+        want_all.append(want)
+    for mode in ("epoch", "spatial"):
+        srv = KnnServer(spec, invalidation=mode)
+        srv.ingest_objects(pts)
+        tenants = [srv.admit(f"t{i}") for i in range(3)]
+        handles = [t.register_queries(tq[i]) for i, t in enumerate(tenants)]
+        got = []
+        for t in range(3):
+            if t == 2:
+                tenants[1].update_objects(ids, new)
+            st = srv.submit()
+            res = st.result()
+            if t == 1:
+                assert res.rows_computed == 0, (plan, mode, res)  # replay
+            got.append([st.result_for(h) for h in handles])
+        for i in range(3):
+            want = want_all[i]
+            for srv_t, solo_t in ((0, 0), (1, 0), (2, 1)):
+                np.testing.assert_array_equal(
+                    got[srv_t][i][0], want[solo_t].nn_idx,
+                    err_msg=f"{plan}/{mode}/t{i}")
+                np.testing.assert_array_equal(
+                    got[srv_t][i][1], want[solo_t].nn_dist,
+                    err_msg=f"{plan}/{mode}/t{i}")
+
+    # spatial acceptance: the delta tick serves the hotspot 100% from cache
+    # (epoch mode would recompute every row), bits equal to recomputation
+    srv = KnnServer(spec, invalidation="spatial")
+    srv.ingest_objects(pts2)
+    hot = srv.admit("hot")
+    hh = hot.register_queries(hotq)
+    srv.submit().result()
+    hot.update_objects(far_ids, far_new)
+    st = srv.submit()
+    res = st.result()
+    assert res.rows_computed == 0 and res.cache_hit_rows > 0, (plan, res)
+    assert srv.cache.last_invalidation == "delta-stab:hot", plan
+    ii, dd, _ = st.result_for(hh)
+    world2 = pts2.copy()
+    world2[far_ids] = far_new
+    sess = KnnSession(spec)
+    sess.ingest_objects(world2)
+    sess.register_queries(hotq)
+    cold = sess.submit().result()
+    np.testing.assert_array_equal(ii, cold.nn_idx, err_msg=plan)
+    np.testing.assert_array_equal(dd, cold.nn_dist, err_msg=plan)
 print("SERVE_8DEV_OK")
 """
     env = dict(os.environ, PYTHONPATH=SRC)
