@@ -17,7 +17,15 @@ hardware limits rather than vibes:
             O(N) cumsums and output gathers of the sparse splice plan.
             All sub-bars are bandwidth-bound — the delta path's win is
             staging bytes, not arithmetic, and the table shows exactly
-            which bytes stop scaling with N.
+            which bytes stop scaling with N.  The object-mesh plans
+            (object_sharded / hybrid) add a PER-PLAN pair of bars for the
+            device-local tree refresh the shard_map body runs each tick:
+            ``local-rebuild`` re-sorts each ceil(N/R)-row slice
+            (``build_index`` per device), ``local-derived`` reuses the
+            spliced global order — masked slice + interval pyramid off the
+            global starts (``core.plan._local_index_derived``), a fixed
+            O(4**l_max) cost with NO sort bytes, which is the sharded
+            maintenance win.
   sweep   — the distance/prune pass over the measured candidate volume.
             fp32 reads 12 B/candidate; ``precision="mixed"`` reads bf16
             positions (8 B/candidate with the id) and re-ranks only the
@@ -177,6 +185,47 @@ def _reindex_stages(n, delta_rows, l_max):
     ]
 
 
+def _local_tree_stages(n, r_obj, l_max):
+    """The object-mesh plans' per-device local-tree refresh, both paths.
+
+    Under ``maintenance="rebuild"`` every device re-derives its quadtree
+    from its ceil(N/R)-row Morton slice each tick: encode + stable sort +
+    bincount over the slice (``core.plan._local_index``).  Under
+    ``"incremental"``/``"skip"`` the globally spliced order is already
+    current, so the local tree is DERIVED: both paths stream the slice
+    (dynamic_slice + mask), but the derived one replaces the per-device
+    sort with an interval pyramid off the global prefix offsets
+    (``_local_index_derived``) — a fixed O(4**l_max) gather/rollup whose
+    bytes do not scale with N/R.  Devices run concurrently, so one shard's
+    volume is the per-tick stage volume."""
+    if r_obj <= 1:
+        return []
+    nr = -(-n // r_obj)
+    pyr = (4 ** (l_max + 1) - 1) // 3
+    fine = 4 ** l_max
+    log_nr = max(1, math.ceil(math.log2(max(nr, 2))))
+    passes = max(1, math.ceil(log_nr / 8))
+    # both paths carve + mask the (pos, id, code) slice: read + write
+    slice_bytes = 2 * nr * (12 + 4 + 4)
+    return [
+        {
+            "stage": f"reindex[local-rebuild,R={r_obj}]",
+            "bytes": (slice_bytes + nr * 12 + passes * 2 * nr * 8
+                      + 2 * nr * 12 + nr * 4 + 3 * pyr * 4),
+            "flops": nr * 30 + nr * log_nr + nr + 2 * pyr,
+            "model": (f"per device: encode + {passes}-pass sort + bincount "
+                      f"over its ceil(N/R)={nr}-row slice"),
+        },
+        {
+            "stage": f"reindex[local-derived,R={r_obj}]",
+            "bytes": slice_bytes + (fine + 1) * 8 + 3 * pyr * 4,
+            "flops": 2 * fine + 2 * pyr,
+            "model": (f"per device: masked slice + interval pyramid off the "
+                      f"global starts ({fine} fine cells), no sort"),
+        },
+    ]
+
+
 def build_stages(objects, queries, q_padded, k, candidates, r_obj,
                  collect_ms, delta_rows, l_max):
     """The per-stage (bytes, flops) volumes.  Every count is a documented
@@ -184,6 +233,7 @@ def build_stages(objects, queries, q_padded, k, candidates, r_obj,
     n, c = objects, candidates
     stages = []
     stages.extend(_reindex_stages(n, delta_rows, l_max))
+    stages.extend(_local_tree_stages(n, r_obj, l_max))
 
     # sweep: per candidate read the (x,y) position + id, ~8 flops
     # (2 sub, 2 mul, 1 add, compare + amortized selection update)
@@ -297,8 +347,10 @@ def run(
     print(fmt_table(stages))
     if out:
         rec = {
-            "schema": 2,  # schema 2: reindex split into recode/sort/pyramid
-            # sub-bars x rebuild/incremental (delta-aware volumes)
+            "schema": 3,  # schema 3: + per-plan local-tree refresh bars
+            # (local-rebuild vs local-derived for the object-mesh plans);
+            # schema 2 split reindex into recode/sort/pyramid sub-bars
+            # x rebuild/incremental (delta-aware volumes)
             "objects": objects, "queries": queries, "k": k, "chunk": chunk,
             "window": window, "ticks": ticks,
             "update_fraction": update_fraction,

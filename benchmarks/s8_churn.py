@@ -13,7 +13,14 @@ the plan sweep.  Per row we record:
   jitted device program at the session's exact N / delta-pad shapes,
   ``block_until_ready``-bracketed, min of ``reps``).  Both variants are
   always reported (``reindex_rebuild_s`` / ``reindex_incremental_s``) so
-  the artifact carries the full rebuild-vs-delta curve;
+  the artifact carries the full rebuild-vs-delta curve.  For the plans with
+  an object mesh axis (object_sharded / hybrid) the stage is PLAN-AWARE:
+  it adds the per-device local-tree refresh the shard_map body runs each
+  tick — ``build_index`` over one ceil(N/R)-row slice under ``rebuild``
+  vs the derived local tree (masked slice + interval pyramid off the global
+  starts, ``core.plan._local_index_derived``) under ``incremental`` — split
+  out as ``local_rebuild_s`` / ``local_derived_s`` next to the global
+  ``global_rebuild_s`` / ``global_incremental_s`` components;
 * ``mode_used`` — what the session's scheduler chose in steady state: at
   100% churn the budget (``churn_budget=0.25``) correctly defers the
   incremental spec to the full refresh, and the row shows it;
@@ -40,7 +47,8 @@ import sys
 import time
 
 DEFAULT_CHURNS = (0.001, 0.01, 0.1, 1.0)
-DEFAULT_PLANS = (("single", ""), ("sharded", "8"), ("hybrid", "2x4"))
+DEFAULT_PLANS = (("single", ""), ("sharded", "8"), ("object_sharded", "8"),
+                 ("hybrid", "2x4"))
 DEFAULT_DEVICES = 8
 DELTA_PAD = 256
 CHURN_BUDGET = 0.25
@@ -66,6 +74,7 @@ def _child(args) -> None:
     from repro.api import KnnSession, ServiceSpec
     from repro.core import (
         build_index,
+        object_shard_capacity,
         pad_capacity,
         reindex_objects,
         reindex_objects_delta,
@@ -151,6 +160,53 @@ def _child(args) -> None:
     t_rebuild = stage_time(reindex_objects, idx, nxt_dev)
     t_incremental = stage_time(reindex_objects_delta, idx, nxt_dev,
                                padded_dev, old_dev)
+
+    # plan-aware local-tree component: the object-mesh plans refresh R
+    # device-local quadtrees per tick inside shard_map — under "rebuild"
+    # each device re-sorts its ceil(N/R)-row slice (build_index); under
+    # "incremental" it derives the local tree from the already-spliced
+    # global order (masked slice + interval pyramid, no per-device sort).
+    # Timed standalone at one full shard's exact capacity — devices run
+    # concurrently, so one shard's cost IS the per-tick stage cost.
+    mesh = _parse_mesh(args.mesh)
+    r_o = 1
+    if args.plan == "object_sharded":
+        r_o = int(mesh)
+    elif args.plan == "hybrid":
+        r_o = int(mesh[1])
+    t_local_rebuild = t_local_derived = 0.0
+    if r_o > 1:
+        from repro.core import plan as plan_mod
+
+        capo = object_shard_capacity(n, r_o)
+        opos, oids, ocodes = plan_mod._pad_object_tail(full, capo)
+        own = min(capo, n)  # shard 0 is always full
+        opos_l, oids_l, codes_l = opos[:capo], oids[:capo], ocodes[:capo]
+        clone_code = codes_l[own - 1]
+
+        @jax.jit
+        def _loc_rebuild(p, i):
+            return plan_mod._local_index(
+                p, i, full.origin, full.side, l_max=7, th_quad=96)
+
+        @jax.jit
+        def _loc_derived(p, i, c, cc, gs):
+            return plan_mod._local_index_derived(
+                full.origin, full.side, p, i, c, cc, gs, jnp.int32(0),
+                jnp.int32(own), capo, l_max=7, th_quad=96)
+
+        loc_reb = jax.block_until_ready(_loc_rebuild(opos_l, oids_l))
+        loc_der = jax.block_until_ready(_loc_derived(
+            opos_l, oids_l, codes_l, clone_code, full.starts))
+        for f in ("pos", "ids", "codes", "starts", "pyramid", "leaf_level"):
+            assert np.array_equal(np.asarray(getattr(loc_reb, f)),
+                                  np.asarray(getattr(loc_der, f))), f
+        t_local_rebuild = stage_time(_loc_rebuild, opos_l, oids_l)
+        t_local_derived = stage_time(_loc_derived, opos_l, oids_l, codes_l,
+                                     clone_code, full.starts)
+
+    reb_total = t_rebuild + t_local_rebuild
+    inc_total = t_incremental + t_local_derived
     row = {
         "churn": args.churn,
         "delta_rows": d,
@@ -163,10 +219,15 @@ def _child(args) -> None:
         "ticks": args.ticks,
         "k": args.k,
         "chunk": args.chunk,
-        "reindex_stage_s": (t_incremental if mode_used == "incremental"
-                            else t_rebuild),
-        "reindex_rebuild_s": t_rebuild,
-        "reindex_incremental_s": t_incremental,
+        "object_axis": r_o,
+        "reindex_stage_s": (inc_total if mode_used == "incremental"
+                            else reb_total),
+        "reindex_rebuild_s": reb_total,
+        "reindex_incremental_s": inc_total,
+        "global_rebuild_s": t_rebuild,
+        "global_incremental_s": t_incremental,
+        "local_rebuild_s": t_local_rebuild,
+        "local_derived_s": t_local_derived,
         "tick_s_median": float(np.median(walls)),
         "bit_identical": bit_identical,
     }
@@ -243,26 +304,34 @@ def run(
             summary.append({
                 "churn": churn,
                 "plan": plan,
+                "object_axis": pair["incremental"]["object_axis"],
                 "delta_rows": pair["incremental"]["delta_rows"],
                 "mode_used_incremental": pair["incremental"]["mode_used"],
                 "reindex_rebuild_s": reb,
                 "reindex_incremental_s": inc,
+                "local_rebuild_s": pair["rebuild"]["local_rebuild_s"],
+                "local_derived_s": pair["incremental"]["local_derived_s"],
                 "stage_ratio": reb / inc if inc > 0 else float("inf"),
             })
     if check:
         # §15 acceptance: the stage pays for churn, not for N — at every
         # churn level <= 10% the incremental stage must be >= 3x cheaper
-        # (at 100% churn the budget defers to rebuild and the ratio ~ 1)
+        # (at 100% churn the budget defers to rebuild and the ratio ~ 1).
+        # For the object-mesh plans the stage includes the per-device
+        # local-tree refresh, whose derived path saves a capo-row sort but
+        # keeps an O(4**l_max) floor — the sharded acceptance bar is >= 2x
+        # (ISSUE 10), still on the plan-aware total.
         for s in summary:
             if s["churn"] <= 0.1:
+                bar = 2.0 if s["object_axis"] > 1 else 3.0
                 assert s["mode_used_incremental"] == "incremental", s
-                assert s["stage_ratio"] >= 3.0, (
-                    f"incremental reindex not >= 3x cheaper at churn "
+                assert s["stage_ratio"] >= bar, (
+                    f"incremental reindex not >= {bar}x cheaper at churn "
                     f"{s['churn']} on plan {s['plan']}: {s}"
                 )
     if out:
         rec = {
-            "schema": 1,
+            "schema": 2,
             "unit": "seconds",
             "devices": devices,
             "churn_budget": CHURN_BUDGET,

@@ -48,12 +48,13 @@ import numpy as np
 from repro.core.executor import resolve_executor
 from repro.core.pipeline import default_max_nav
 from repro.core.plan import pad_capacity, pad_queries, resolve_plan
-from repro.core.quadtree import build_index
+from repro.core.quadtree import build_index, rebuild_zmap, reindex_objects_delta
 from repro.core.ticks import (
     _tick_step,
     object_shard_of,
     route_delta,
     scatter_positions,
+    shard_churn_over_budget,
 )
 
 from .handles import QueryHandle, TickHandle
@@ -498,15 +499,75 @@ class KnnSession:
         self._qweight_staged = None
 
     # ------------------------------------------------------------ serving
+    def _assemble_delta(self):
+        """Padded (delta_ids, delta_old_pos) device arrays for the pending set.
+
+        ``delta_ids`` is the sorted-unique pending union padded to the
+        ``delta_pad`` granularity with the sentinel id N; ``delta_old_pos``
+        gathers each id's as-of-refresh position (first touch wins) out of
+        the captured pre-scatter batches — one device-side gather, async.
+        Requires ``self._pending_ids`` to be a known (non-None) delta.
+        """
+        n = self.num_objects
+        m = self._pending_ids.size
+        pad = pad_capacity(max(m, 1), self.spec.delta_pad) - m
+        delta_ids_dev = jnp.asarray(np.concatenate(
+            [self._pending_ids, np.full((pad,), n, np.int32)]
+        ))
+        sel = np.concatenate(
+            [self._pending_src, np.zeros((pad,), np.int64)]
+        ).astype(np.int32)
+        batches = self._pending_old_batches
+        cat = batches[0] if len(batches) == 1 else jnp.concatenate(batches)
+        return delta_ids_dev, cat[jnp.asarray(sel)]
+
     def _build(self):
-        """(Re)build the space partition from the current device positions."""
-        self._index = build_index(
-            self._positions,
-            jnp.asarray(self.spec.origin, jnp.float32),
-            self.spec.side,
-            l_max=self.spec.l_max,
-            th_quad=self.spec.th_quad,
-        )
+        """(Re)build the space partition from the current device positions.
+
+        Three routes to the same bits (the stage-(i) reuse rule, DESIGN.md
+        §15).  The drift policy only needs the leaf partition (z_map)
+        re-decided; the sorted order, pyramid and offsets are pure functions
+        of the positions buffer that the maintenance paths may already hold:
+
+        * buffer CLEAN (index refreshed from this very buffer): everything
+          but ``leaf_level`` is already what ``build_index`` would produce —
+          ``rebuild_zmap`` replaces the O(N log N) re-sort with one
+          O(4**l_max) leaf-level pass;
+        * buffer dirty with a known in-budget delta under an incremental
+          spec: splice the pending rows into the order
+          (``reindex_objects_delta``), then re-derive the leaf partition
+          from the spliced pyramid — still no fresh argsort;
+        * anything else (first build, snapshot ingest, over-budget churn,
+          rebuild spec): the full ``build_index``.
+
+        All three produce bitwise-identical indexes (build ≡ reindex on
+        pos/ids/codes/starts/pyramid; ``leaf_level`` is the same
+        ``_leaf_levels`` op over equal pyramids), pinned by
+        tests/test_maintenance.py.
+        """
+        spec = self.spec
+        if self._index is not None and not self._positions_dirty:
+            self._index = rebuild_zmap(self._index)
+        elif (
+            self._index is not None
+            and spec.maintenance == "incremental"
+            and self._pending_ids is not None
+            and self._pending_ids.size <= spec.churn_budget * self.num_objects
+        ):
+            ids_dev, old_dev = self._assemble_delta()
+            self._index = rebuild_zmap(
+                reindex_objects_delta(
+                    self._index, self._positions, ids_dev, old_dev
+                )
+            )
+        else:
+            self._index = build_index(
+                self._positions,
+                jnp.asarray(self.spec.origin, jnp.float32),
+                self.spec.side,
+                l_max=self.spec.l_max,
+                th_quad=self.spec.th_quad,
+            )
         self._work_at_build = None  # set at the next tick's finalize
         # the stored object boundaries index Morton ranks of the PREVIOUS
         # partition — stale after a rebuild; ownership answers fall back to
@@ -632,19 +693,23 @@ class KnnSession:
             and self._pending_ids.size <= spec.churn_budget * n
         ):
             mode = "incremental"
-            m = self._pending_ids.size
-            pad = pad_capacity(max(m, 1), spec.delta_pad) - m
-            delta_ids_dev = jnp.asarray(np.concatenate(
-                [self._pending_ids, np.full((pad,), n, np.int32)]
-            ))
             # as-of-refresh positions of the pending ids: one gather over
             # the captured pre-scatter batches (device-side, async)
-            sel = np.concatenate(
-                [self._pending_src, np.zeros((pad,), np.int64)]
-            ).astype(np.int32)
-            batches = self._pending_old_batches
-            cat = batches[0] if len(batches) == 1 else jnp.concatenate(batches)
-            delta_old_pos_dev = cat[jnp.asarray(sel)]
+            delta_ids_dev, delta_old_pos_dev = self._assemble_delta()
+            if self.plan.object_axis_size > 1:
+                # per-shard budget (DESIGN.md §15): the global fraction can
+                # hide one shard absorbing most of the churn — past
+                # churn_budget × its OWNED rows, that shard's local re-sort
+                # is the cheaper refresh, so the whole tick defers.  One ()
+                # bool readback against the last tick's index/boundaries; the
+                # pending ticks were already finalized above, so this is not
+                # a new synchronization point.
+                if bool(shard_churn_over_budget(
+                    self._index, delta_ids_dev, self.plan.object_axis_size,
+                    spec.churn_budget, self._obj_bounds,
+                )):
+                    mode = "rebuild"
+                    delta_ids_dev = delta_old_pos_dev = None
         else:
             # over-budget churn defers to the FULL stage-(ii) refresh (not
             # build_index: the z_map stays put so the drift trigger fires

@@ -115,7 +115,13 @@ from .pipeline import (
     _sort_unsort,
     zero_stats,
 )
-from .quadtree import QuadtreeIndex, build_index
+from .quadtree import (
+    QuadtreeIndex,
+    _leaf_levels,
+    build_index,
+    local_pyramid_from_starts,
+    starts_from_pyramid,
+)
 
 __all__ = [
     "ExecutionPlan",
@@ -297,12 +303,16 @@ def _pad_tail_rows(qpos_s, qid_s, extra: int):
 
 
 def _pad_object_tail(index: QuadtreeIndex, extra: int):
-    """Morton-sorted (pos, gids) padded by ``extra`` sentinel rows.
+    """Morton-sorted (pos, gids, codes) padded by ``extra`` sentinel rows.
 
     Same construction as :func:`_pad_object_slices` (clone-position, id -1
     rows the scan's validity mask drops), but sized for the boundary-sliced
     path: a shard reads ``capacity`` rows starting at its boundary, so the
     tail needs ``capacity`` spare rows for the last shard's mask region.
+    The padded codes clone the last real code — consistent with the cloned
+    positions (``encode`` of the clone position IS the clone code), which is
+    what keeps the derived local-index path (:func:`_local_index_derived`)
+    bitwise-equal to re-encoding the cloned slice.
     """
     n = index.n_objects
     opos = (
@@ -311,7 +321,12 @@ def _pad_object_tail(index: QuadtreeIndex, extra: int):
         .at[n:].set(index.pos[-1])
     )
     oids = jnp.full((n + extra,), -1, jnp.int32).at[:n].set(index.ids)
-    return opos, oids
+    ocodes = (
+        jnp.zeros((n + extra,), jnp.int32)
+        .at[:n].set(index.codes)
+        .at[n:].set(index.codes[-1])
+    )
+    return opos, oids, ocodes
 
 
 def _pad_object_slices(index: QuadtreeIndex, num_shards: int):
@@ -374,6 +389,52 @@ def _local_index(opos, oids, origin, side, *, l_max, th_quad):
     """
     local = build_index(opos, origin, side, l_max=l_max, th_quad=th_quad)
     return dataclasses.replace(local, ids=oids[local.ids])
+
+
+def _local_index_derived(origin, side, opos_l, oids_l, codes_l, clone_code,
+                         gstarts, start, own, capo: int, *, l_max, th_quad):
+    """The shard-local quadtree DERIVED from the globally maintained order.
+
+    The incremental maintenance path (DESIGN.md §15) keeps the global index's
+    ``(code, id)``-sorted order current by splicing only the moved rows — and
+    a device's Morton-contiguous boundary slice of that order is *already*
+    sorted, so :func:`_local_index`'s ``build_index`` (encode + stable argsort
+    + bincount over the slice) is the identity permutation re-deriving what
+    the global arrays already hold:
+
+    * ``pos``/``ids``/``codes`` are the masked slice itself (surplus capacity
+      rows collapse onto the last owned row / its code, exactly as the build
+      path's clone rows encode);
+    * the local count pyramid is interval arithmetic over the GLOBAL
+      ``starts`` (:func:`~repro.core.quadtree.local_pyramid_from_starts`) —
+      integer-exact equal to the build path's ``bincount``;
+    * ``leaf_level`` and local ``starts`` are the same ``_leaf_levels`` /
+      ``starts_from_pyramid`` ops over that (bitwise-equal) pyramid.
+
+    Net: per-shard index maintenance costs O(4**l_max) gathers + adds instead
+    of the build path's O(capo log capo) sort — the local trees pay for churn
+    (already paid globally, Δ-sized) instead of N/R, which is the tentpole of
+    the sharded incremental maintenance PR.  Bitwise-equal to
+    :func:`_local_index` whenever the global index is current for the sliced
+    arrays (pinned by tests/test_maintenance.py and the property harness).
+    """
+    pyramid = local_pyramid_from_starts(
+        gstarts, start, own, clone_code, capo, l_max
+    )
+    leaf_level = _leaf_levels(pyramid, l_max, th_quad)
+    starts = starts_from_pyramid(pyramid, l_max)
+    return QuadtreeIndex(
+        origin=origin,
+        side=side,
+        pos=opos_l,
+        ids=oids_l,
+        codes=codes_l,
+        starts=starts,
+        leaf_level=leaf_level,
+        pyramid=pyramid,
+        l_max=l_max,
+        th_quad=th_quad,
+    )
 
 
 def _take_replica0(x, n_replicas: int):
@@ -488,9 +549,10 @@ def _chunked_sweep_masked(index, qpos_s, qid_s, n_live_chunks, *, k, window,
     return idx_c.reshape(nq, k), d2_c.reshape(nq, k), stats, cq_c.reshape(nq)
 
 
-def _object_merge_local(origin, side, opos_r, oids_r, qp_l, qi_l, ownq_chunks,
-                        bo, capo, *, l_max, th_quad, k, window, chunk,
-                        max_nav, max_iters, executor, merge):
+def _object_merge_local(origin, side, opos_r, oids_r, ocodes_r, gstarts,
+                        qp_l, qi_l, ownq_chunks, bo, capo, *, l_max, th_quad,
+                        k, window, chunk, max_nav, max_iters, executor, merge,
+                        maintenance="rebuild"):
     """Device-local body shared by object_sharded and hybrid (inside shard_map).
 
     Carves the device's own Morton-contiguous object slice out of the padded
@@ -512,6 +574,19 @@ def _object_merge_local(origin, side, opos_r, oids_r, qp_l, qi_l, ownq_chunks,
 
     ``origin``/``side`` arrive as explicit (replicated) operands, not a
     closure — shard_map bodies must not capture traced values.
+
+    ``maintenance`` (a STATIC python string, safe to close over) selects how
+    the device-local quadtree is obtained: ``"rebuild"`` re-derives it from
+    the sliced positions with :func:`_local_index` (encode + argsort +
+    bincount over ``capo`` rows — the pre-seam behaviour and the bench
+    baseline); any other mode (``"incremental"`` / ``"skip"``) means the
+    global index's sorted order and pyramid are current for the sliced
+    arrays, so the local tree is *derived* from them
+    (:func:`_local_index_derived`: masked slice + interval pyramid from the
+    replicated global ``starts``) — no per-device sort, O(4**l_max) instead
+    of O(capo log capo).  ``ocodes_r``/``gstarts`` carry the padded global
+    codes and global prefix offsets for that path (replicated operands, dead
+    code under ``"rebuild"``).
 
     Two jax-0.4.x fallback-shard_map miscompiles shape this body (both
     caught by the bit-parity harness on the forced 8-device grid; newer jax
@@ -542,8 +617,17 @@ def _object_merge_local(origin, side, opos_r, oids_r, qp_l, qi_l, ownq_chunks,
     clone = opos_raw[jnp.clip(own - 1, 0, capo - 1)]
     opos_l = jnp.where(mask[:, None], opos_raw, clone[None, :])
     oids_l = jnp.where(mask, oids_raw, -1)
-    local = _local_index(opos_l, oids_l, origin, side,
-                         l_max=l_max, th_quad=th_quad)
+    if maintenance == "rebuild":
+        local = _local_index(opos_l, oids_l, origin, side,
+                             l_max=l_max, th_quad=th_quad)
+    else:
+        codes_raw = jax.lax.dynamic_slice_in_dim(ocodes_r, start, capo, 0)
+        clone_code = codes_raw[jnp.clip(own - 1, 0, capo - 1)]
+        codes_l = jnp.where(mask, codes_raw, clone_code)
+        local = _local_index_derived(
+            origin, side, opos_l, oids_l, codes_l, clone_code, gstarts,
+            start, own, capo, l_max=l_max, th_quad=th_quad,
+        )
     if ownq_chunks is None:
         idx_l, d2_l, st, cq_l = _chunked_sweep(
             local, qp_l, qi_l, k=k, window=window, chunk=chunk,
@@ -580,7 +664,8 @@ class ExecutionPlan:
         raise NotImplementedError
 
     def run(self, index: QuadtreeIndex, qpos, qid, qcost, *, k, window,
-            chunk, max_nav, max_iters, executor, qweight=None):
+            chunk, max_nav, max_iters, executor, qweight=None,
+            maintenance="rebuild"):
         """Trace-level tick sweep: (index, padded Q) -> (idx, dist, aux).
 
         ``qpos.shape[0]`` must be a whole multiple of ``pad_multiple(chunk)``;
@@ -591,8 +676,14 @@ class ExecutionPlan:
         ``core.balance.tenant_fair_weights``); it scales *influence on shard
         boundaries only* — plans that never split the query axis ignore it,
         and because boundaries only move shard ownership (DESIGN.md §13) it
-        can never change results.  Results come back in the caller's query
-        order, distances euclidean; ``aux`` is the :class:`PlanAux` record.
+        can never change results.  ``maintenance`` is the STATIC mode the
+        tick step refreshed the index under (DESIGN.md §15): plans without
+        per-device local trees ignore it; the object-axis plans use it to
+        pick the local-index path — ``"rebuild"`` re-builds each local tree
+        from its slice, ``"incremental"``/``"skip"`` derive it from the
+        (current) global sorted order with no per-device sort.  Results come
+        back in the caller's query order, distances euclidean; ``aux`` is the
+        :class:`PlanAux` record.
         """
         raise NotImplementedError
 
@@ -617,8 +708,9 @@ class SinglePlan(ExecutionPlan):
         return chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor, qweight=None):
+            max_iters, executor, qweight=None, maintenance="rebuild"):
         del qweight  # no query-axis split: fairness weights have no seam here
+        del maintenance  # no local trees: the global index is swept directly
         order, inv = _sort_unsort(index, qpos)
         idx_s, d2_s, stats, cq_s = _chunked_sweep(
             index, qpos[order], qid[order], k=k, window=window, chunk=chunk,
@@ -666,7 +758,8 @@ class ShardedPlan(ExecutionPlan):
         return self.num_devices * chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor, qweight=None):
+            max_iters, executor, qweight=None, maintenance="rebuild"):
+        del maintenance  # index replicated, no local trees to maintain
         from jax.sharding import PartitionSpec as P
 
         mesh = make_query_mesh(self.num_devices)
@@ -780,7 +873,7 @@ class ObjectShardedPlan(ExecutionPlan):
         return chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor, qweight=None):
+            max_iters, executor, qweight=None, maintenance="rebuild"):
         del qweight  # queries replicated, not split: no boundary to seed
         from jax.sharding import PartitionSpec as P
 
@@ -798,14 +891,16 @@ class ObjectShardedPlan(ExecutionPlan):
         bo = self.partitioner.object_boundaries(
             _object_row_costs(index), self.num_devices
         )
-        opos, oids = _pad_object_tail(index, capo)
+        opos, oids, ocodes = _pad_object_tail(index, capo)
 
-        def device_local(origin, side, opos_r, oids_r, qp, qi, bo_r):
+        def device_local(origin, side, opos_r, oids_r, ocodes_r, gstarts,
+                         qp, qi, bo_r):
             return _object_merge_local(
-                origin, side, opos_r, oids_r, qp, qi, None, bo_r, capo,
+                origin, side, opos_r, oids_r, ocodes_r, gstarts, qp, qi,
+                None, bo_r, capo,
                 l_max=index.l_max, th_quad=index.th_quad, k=k, window=window,
                 chunk=chunk, max_nav=max_nav, max_iters=max_iters,
-                executor=executor, merge=self.merge,
+                executor=executor, merge=self.merge, maintenance=maintenance,
             )
 
         # object arrays + boundaries enter replicated (devices self-slice by
@@ -815,14 +910,15 @@ class ObjectShardedPlan(ExecutionPlan):
         sharded = shard_map_compat(
             device_local,
             mesh=mesh,
-            in_specs=(repl_spec,) * 7,
+            in_specs=(repl_spec,) * 9,
             out_specs=(out2_spec, out2_spec,
                        KnnStats(out1_spec, out1_spec, out1_spec), out1_spec),
             axis_names={"object"},
             check_vma=False,
         )
         idx_t, d2_t, st_t, cq_t = sharded(
-            index.origin, index.side, opos, oids, qpos_s, qid_s, bo
+            index.origin, index.side, opos, oids, ocodes, index.starts,
+            qpos_s, qid_s, bo
         )
         idx_s = _take_replica0(idx_t, self.num_devices)
         d2_s = _take_replica0(d2_t, self.num_devices)
@@ -886,7 +982,7 @@ class HybridPlan(ExecutionPlan):
         return self.query_devices * chunk
 
     def run(self, index, qpos, qid, qcost, *, k, window, chunk, max_nav,
-            max_iters, executor, qweight=None):
+            max_iters, executor, qweight=None, maintenance="rebuild"):
         from jax.sharding import PartitionSpec as P
 
         qd, od = self.query_devices, self.object_devices
@@ -913,32 +1009,35 @@ class HybridPlan(ExecutionPlan):
         )
         bo = self.partitioner.object_boundaries(_object_row_costs(index), od)
         qs_pad, qi_pad = _pad_tail_rows(qpos_s, qid_s, capq * chunk)
-        opos, oids = _pad_object_tail(index, capo)
+        opos, oids, ocodes = _pad_object_tail(index, capo)
 
-        def device_local(origin, side, opos_r, oids_r, qp, qi, bq_r, bo_r):
+        def device_local(origin, side, opos_r, oids_r, ocodes_r, gstarts,
+                         qp, qi, bq_r, bo_r):
             i = jax.lax.axis_index("query")
             qstart = bq_r[i] * chunk
             ownq = bq_r[i + 1] - bq_r[i]
             qp_l = jax.lax.dynamic_slice_in_dim(qp, qstart, capq * chunk, 0)
             qi_l = jax.lax.dynamic_slice_in_dim(qi, qstart, capq * chunk, 0)
             return _object_merge_local(
-                origin, side, opos_r, oids_r, qp_l, qi_l, ownq, bo_r, capo,
+                origin, side, opos_r, oids_r, ocodes_r, gstarts, qp_l, qi_l,
+                ownq, bo_r, capo,
                 l_max=index.l_max, th_quad=index.th_quad, k=k, window=window,
                 chunk=chunk, max_nav=max_nav, max_iters=max_iters,
-                executor=executor, merge=self.merge,
+                executor=executor, merge=self.merge, maintenance=maintenance,
             )
 
         sharded = shard_map_compat(
             device_local,
             mesh=mesh,
-            in_specs=(repl_spec,) * 8,
+            in_specs=(repl_spec,) * 10,
             out_specs=(out2_spec, out2_spec,
                        KnnStats(out1_spec, out1_spec, out1_spec), out1_spec),
             axis_names={"query", "object"},
             check_vma=False,
         )
         idx_t, d2_t, st_t, cq_t = sharded(
-            index.origin, index.side, opos, oids, qs_pad, qi_pad, bq, bo
+            index.origin, index.side, opos, oids, ocodes, index.starts,
+            qs_pad, qi_pad, bq, bo
         )
         # shard (i, j) emits at block i*od + j of the tiled output; taking
         # object-replica j=0 makes the query-shard stride od * capq * chunk
@@ -1078,7 +1177,7 @@ def resolve_plan(plan, *, num_devices=None, partitioner=None,
 @partial(
     jax.jit,
     static_argnames=("k", "window", "chunk", "max_nav", "max_iters",
-                     "executor", "plan"),
+                     "executor", "plan", "maintenance"),
 )
 def run_plan_device(
     index: QuadtreeIndex,
@@ -1094,6 +1193,7 @@ def run_plan_device(
     max_iters: int,
     executor,
     plan: ExecutionPlan,
+    maintenance: str = "rebuild",
 ):
     """Memory-bounded batch k-NN as ONE device program, laid out by ``plan``.
 
@@ -1106,6 +1206,12 @@ def run_plan_device(
     multiplier on the boundary seed (None = unweighted; see
     :meth:`ExecutionPlan.run`) — None is a valid pytree leaf-set, so sessions
     that never set weights compile the exact same program as before.
+
+    ``maintenance`` forwards the tick step's STATIC refresh mode to the plan
+    (see :meth:`ExecutionPlan.run`): the object-axis plans derive their local
+    trees from the global sorted order instead of re-building them whenever
+    the mode guarantees that order is current (``"incremental"``/``"skip"``).
+    The default ``"rebuild"`` is always valid.
 
     Returns (nn_idx (Q,k) i32, nn_dist (Q,k) f32 euclidean, aux
     :class:`PlanAux`) in the caller's query order (padding rows come back in
@@ -1127,6 +1233,7 @@ def run_plan_device(
         max_iters=max_iters,
         executor=executor,
         qweight=None if qweight is None else qweight.astype(jnp.float32),
+        maintenance=maintenance,
     )
 
 
@@ -1168,6 +1275,7 @@ def knn_query_batch_chunked(
     num_devices: int | None = None,
     partitioner=None,
     merge=None,
+    maintenance: str = "rebuild",
     with_aux: bool = False,
 ):
     """Host-friendly wrapper over :func:`run_plan_device` (numpy in/out).
@@ -1176,9 +1284,12 @@ def knn_query_batch_chunked(
     plan by name (default ``single`` / ``equal`` / ``dense_merge``);
     ``backend``/``precision`` the executor (default ``dense_topk`` /
     ``fp32``).  Padding and stripping are handled here, once, host-side.
-    ``with_aux=True`` appends the host-materialized :class:`PlanAux`
-    (per-shard counters, cost EMA, object boundaries) to the return tuple —
-    the benchmarks' straggler-gap probe.
+    ``maintenance`` forwards the local-tree path to the object-axis plans
+    (``"rebuild"`` builds per-device trees; ``"incremental"`` derives them
+    from the index's sorted order — valid because a hand-built index IS
+    current for itself).  ``with_aux=True`` appends the host-materialized
+    :class:`PlanAux` (per-shard counters, cost EMA, object boundaries) to
+    the return tuple — the benchmarks' straggler-gap probe.
     """
     import numpy as np
 
@@ -1203,6 +1314,7 @@ def knn_query_batch_chunked(
         max_iters=max_iters,
         executor=resolve_executor(backend, precision),
         plan=plan,
+        maintenance=maintenance,
     )
     stats = KnnStats(
         iterations=int(aux.stats.iterations),

@@ -33,10 +33,12 @@ from ..kernels.delta_splice import (
 __all__ = [
     "QuadtreeIndex",
     "build_index",
+    "rebuild_zmap",
     "reindex_objects",
     "reindex_objects_delta",
     "leaf_of_points",
     "starts_from_pyramid",
+    "local_pyramid_from_starts",
     "pyramid_delta",
     "ball_stab_mask",
 ]
@@ -142,6 +144,40 @@ def starts_from_pyramid(pyramid: jnp.ndarray, l_max: int) -> jnp.ndarray:
     return jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(fine_counts).astype(jnp.int32)]
     )
+
+
+def local_pyramid_from_starts(starts, lo, own, clone_code, capo: int, l_max: int):
+    """Count pyramid of one Morton-contiguous slice, derived from GLOBAL offsets.
+
+    A shard owning global sorted ranks ``[lo, lo + own)`` (padded to a static
+    ``capo``-row capacity whose surplus rows all carry ``clone_code``) does
+    not need to re-``bincount`` its slice: the global ``starts`` array already
+    counts every fine cell, so the slice's population of cell ``c`` is the
+    overlap of the cell's global rank interval ``[starts[c], starts[c+1])``
+    with the owned window —
+
+        ``max(0, min(starts[c+1], lo + own) - max(starts[c], lo))``
+
+    — an O(4**l_max) gather + arithmetic with no scatter and no sort.  The
+    ``capo - own`` clone rows are added at ``clone_code`` in one scalar
+    update.  All int32 arithmetic, so the fine level is integer-exact equal
+    to ``bincount`` over the slice's codes, and the reshape-sum rollup is the
+    same op chain as :func:`_count_pyramid` — bitwise-equal pyramids (the
+    per-shard derived-index identity of DESIGN.md §15).
+    """
+    s = starts[:-1]
+    e = starts[1:]
+    hi = lo + own
+    fine = jnp.maximum(
+        jnp.minimum(e, hi) - jnp.maximum(s, lo), 0
+    ).astype(jnp.int32)
+    fine = fine.at[clone_code].add(jnp.int32(capo) - own)
+    levels = [fine]
+    cur = fine
+    for _ in range(l_max):
+        cur = cur.reshape(-1, 4).sum(axis=1)
+        levels.append(cur)
+    return jnp.concatenate(list(reversed(levels)))
 
 
 def pyramid_delta(
@@ -365,6 +401,28 @@ def build_index(
         pyramid=pyramid,
         l_max=l_max,
         th_quad=th_quad,
+    )
+
+
+@jax.jit
+def rebuild_zmap(index: QuadtreeIndex) -> QuadtreeIndex:
+    """Stage (i) only: re-derive the leaf partition (z_map) from the live pyramid.
+
+    The drift policy's rebuild re-decides where the quadtree splits — but when
+    the index's sorted order and pyramid are already current for the positions
+    buffer (a clean buffer, or right after a splice/reindex), a full
+    ``build_index`` would recompute the encode + argsort + recount only to
+    arrive at the very same arrays: ``build_index``'s stable argsort of the
+    id-indexed codes IS the order the maintenance paths keep, and its pyramid
+    is the recount the splice's integer deltas already equal.  The only field
+    a rebuild actually changes is ``leaf_level``, a pure function of the
+    pyramid — so the stage-(i) reuse rule (DESIGN.md §15) replaces the
+    O(N log N) re-sort with one O(4**l_max) ``_leaf_levels`` pass, bitwise
+    equal to ``build_index`` over the same positions.
+    """
+    return dataclasses.replace(
+        index,
+        leaf_level=_leaf_levels(index.pyramid, index.l_max, index.th_quad),
     )
 
 

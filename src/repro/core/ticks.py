@@ -76,6 +76,8 @@ __all__ = [
     "scatter_positions",
     "object_shard_of",
     "route_delta",
+    "delta_shard_counts",
+    "shard_churn_over_budget",
 ]
 
 # Index-maintenance policies (DESIGN.md §15).  "rebuild" = the paper's
@@ -349,6 +351,11 @@ def _tick_step(
         index = reindex_objects_delta(index, positions, delta_ids, delta_old_pos)
     elif maintenance != "skip":
         raise ValueError(f"unknown step maintenance mode {maintenance!r}")
+    # the mode rides into the plan (still static): under "incremental" and
+    # "skip" the index's sorted order/pyramid are current for the buffer, so
+    # the object-axis plans DERIVE their device-local trees from it instead
+    # of re-building one per device from the replicated slice — the sharded
+    # half of the maintenance seam (DESIGN.md §15)
     nn_idx, nn_dist, aux = plan.run(
         index,
         qpos,
@@ -361,6 +368,7 @@ def _tick_step(
         max_iters=max_iters,
         executor=executor,
         qweight=qweight,
+        maintenance=maintenance,
     )
     should_rebuild = aux.stats.candidates > rebuild_factor * work_at_build
     return index, nn_idx, nn_dist, aux, should_rebuild
@@ -427,6 +435,69 @@ def route_delta(index, ids, new_pos, num_shards: int, bounds=None):
     )
     order = jnp.argsort(shard)  # jnp.argsort is stable by default
     return ids[order], new_pos[order]
+
+
+@partial(jax.jit, static_argnames=("num_shards",))
+def delta_shard_counts(index, ids, num_shards: int, bounds=None):
+    """Pending delta rows per owning object shard, device-side.
+
+    The per-shard half of the churn accounting (DESIGN.md §15): counts each
+    valid id of a (sentinel-padded) pending delta batch against the shard
+    that owns it under the LIVE index — the same ownership rule
+    :func:`route_delta` sorts by, so a row is charged to its *source* shard
+    (the shard whose local order it vacates; a cross-shard migrant perturbs
+    its destination too, but the source count is the one the splice's
+    delete-side work tracks, and charging one side keeps the counts a
+    partition of the batch).  Sentinel rows (``id >= N``) fall into a
+    virtual shard ``num_shards`` and are sliced off.  Returns (num_shards,)
+    int32.
+    """
+    n = index.n_objects
+    ids = jnp.asarray(ids, jnp.int32)
+    shard = jnp.where(
+        ids < n,
+        object_shard_of(
+            index, jnp.clip(ids, 0, max(n - 1, 0)), num_shards, bounds
+        ),
+        num_shards,
+    )
+    return jnp.bincount(
+        shard, length=num_shards + 1
+    )[:num_shards].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("num_shards",))
+def shard_churn_over_budget(index, ids, num_shards: int, budget, bounds=None):
+    """Does any object shard's pending churn exceed its per-shard budget?
+
+    The sharded generalization of the session's global ``churn_budget`` rule
+    (DESIGN.md §15): the incremental path's per-shard benefit — deriving each
+    local tree from the spliced global order instead of re-sorting N/R rows —
+    assumes churn stays a small fraction of every shard's OWNED rows; a
+    single shard absorbing more than ``budget`` × its owned count is the
+    local re-sort crossover, so the tick defers to a full rebuild.  Owned
+    counts come from ``bounds`` (the cost-balanced boundaries the last tick
+    used) or the equal-capacity rule clipped to N.  The comparison is strict
+    (``>``): churn exactly AT the budget stays incremental, mirroring the
+    global rule's ``<=`` boundary.  At ``num_shards == 1`` this degenerates
+    to exactly the global rule (and callers skip it).  Returns a () bool.
+    """
+    from .plan import object_shard_capacity
+
+    n = index.n_objects
+    counts = delta_shard_counts(index, ids, num_shards, bounds)
+    if bounds is None:
+        cap = object_shard_capacity(n, num_shards)
+        edges = jnp.minimum(
+            jnp.arange(num_shards + 1, dtype=jnp.int32) * cap, n
+        )
+    else:
+        edges = jnp.asarray(bounds, jnp.int32)
+    owned = edges[1:] - edges[:-1]
+    return jnp.any(
+        counts.astype(jnp.float32)
+        > jnp.float32(budget) * owned.astype(jnp.float32)
+    )
 
 
 @jax.jit

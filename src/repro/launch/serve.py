@@ -41,7 +41,8 @@ from repro.models import (
 def serve_knn(args) -> int:
     spec = ServiceSpec(k=args.k, th_quad=args.th_quad, l_max=args.l_max,
                        chunk=args.chunk, plan=args.plan,
-                       partitioner=args.partitioner, collect=args.collect)
+                       partitioner=args.partitioner, collect=args.collect,
+                       maintenance=args.maintenance)
     if args.tenants > 1:
         return serve_knn_tenants(args, spec)
     session = KnnSession(spec)
@@ -56,20 +57,34 @@ def serve_knn(args) -> int:
         extra = f" compile={res.compile_s:.2f}s" if res.compile_s else ""
         print(
             f"[knn] tick {res.tick}: {tick_s * 1e3:.1f} ms, {qps / 1e3:.1f}K queries/s, "
-            f"iters={res.iterations} rebuilt={res.rebuilt}{extra}",
+            f"iters={res.iterations} rebuilt={res.rebuilt} "
+            f"maint={res.maintenance}{extra}",
             flush=True,
         )
 
-    # session loop: queries registered once; the whole population moves every
-    # tick, so full-snapshot ingest is the cheaper path (update_objects is for
-    # fractional feeds — see benchmarks/s6_serving.py)
+    # session loop: queries registered once.  With --churn 1.0 the whole
+    # population moves every tick and full-snapshot ingest is the cheaper
+    # path; a fractional --churn feeds only the moved rows through the
+    # device-side delta scatter (update_objects) — the regime where
+    # --maintenance incremental splices instead of rebuilding (DESIGN.md §15)
     session.ingest_objects(w.positions())
+    cur = np.asarray(w.positions(), np.float32).copy()
+    churn_rng = np.random.default_rng(args.seed + 1)
     hq = session.register_queries(*w.query_batch(1.0))
     for t in range(args.ticks):
         t0 = time.time()
         if t > 0:
             w.advance()
-            session.ingest_objects(w.positions())
+            new = np.asarray(w.positions(), np.float32)
+            if args.churn < 1.0:
+                d = max(1, int(round(args.objects * args.churn)))
+                ids = churn_rng.choice(args.objects, d,
+                                       replace=False).astype(np.int32)
+                cur[ids] = new[ids]
+                session.update_objects(ids, cur[ids])
+            else:
+                cur = new.copy()
+                session.ingest_objects(cur)
             session.update_queries(hq, w.query_batch(1.0)[0])
         res = session.submit().result()
         on_tick(res, time.time() - t0 - res.compile_s)
@@ -186,6 +201,14 @@ def main(argv=None) -> int:
     k.add_argument("--plan", default="single")
     k.add_argument("--partitioner", default="equal")
     k.add_argument("--collect", default="full")
+    k.add_argument("--maintenance", default="rebuild",
+                   choices=["rebuild", "incremental"],
+                   help="index maintenance: rebuild from scratch each tick, "
+                        "or splice deltas into the live order (DESIGN.md §15)")
+    k.add_argument("--churn", type=float, default=1.0, metavar="F",
+                   help="fraction of objects moved per tick; <1.0 feeds only "
+                        "the moved rows as a delta, the regime where "
+                        "--maintenance incremental pays per shard for churn")
     k.add_argument("--tenants", type=int, default=1,
                    help="serve N tenants through one shared KnnServer tick "
                         "program (repro.serve); 1 = solo KnnSession")

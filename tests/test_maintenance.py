@@ -31,6 +31,7 @@ from repro.core import (
     MAINTENANCE_MODES,
     build_index,
     pyramid_delta,
+    rebuild_zmap,
     reindex_objects,
     reindex_objects_delta,
     starts_from_pyramid,
@@ -356,6 +357,253 @@ def test_session_duplicate_delta_ids_count_once_against_budget():
     ref = reindex_objects(s.index, s._positions)
     _assert_index_equal(s.index, ref, fields=("pos", "ids", "codes", "starts",
                                               "pyramid"))
+
+
+# ------------------------------------------- sharded maintenance (DESIGN §15)
+def test_rebuild_zmap_equals_fresh_build():
+    """Stage-(i) reuse: ``rebuild_zmap`` over a spliced (current) index ==
+    ``build_index`` from scratch, every field bitwise — the drift policy's
+    z_map re-decision needs no fresh argsort when the order is current."""
+    rng = np.random.default_rng(12)
+    n = 700
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    pts[::9] = pts[4]  # coincident rows: code ties in the kept order
+    idx = _index(pts)
+    ids = rng.choice(n, 90, replace=False)
+    pts2 = pts.copy()
+    pts2[ids] = rng.uniform(0, SIDE, (90, 2)).astype(np.float32)
+    got = rebuild_zmap(reindex_objects(idx, jnp.asarray(pts2)))
+    want = _index(pts2)
+    _assert_index_equal(got, want)
+    # idempotent on an already-current index too
+    _assert_index_equal(rebuild_zmap(want), want)
+
+
+@pytest.mark.parametrize("r", [2, 3, 8])
+def test_derived_local_index_bitwise_equals_local_rebuild(r):
+    """The derived local tree (masked slice + interval pyramid from the
+    GLOBAL starts — ``_local_index_derived``) == the per-shard
+    ``build_index`` over the same slice (``_local_index``), every field
+    bitwise, over equal-capacity boundaries — including the uneven final
+    shard and coincident duplicates.  This is the shard_map body's
+    maintenance branch run host-side, shard by shard."""
+    from repro.core import plan as plan_mod
+
+    rng = np.random.default_rng(20 + r)
+    n = 89  # uneven final slice for r = 2, 3, 8
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    pts[::7] = pts[3]
+    idx = _index(pts)
+    cap = plan_mod.object_shard_capacity(n, r)
+    bo = np.minimum(np.arange(r + 1) * cap, n)
+    for s in range(r):
+        rebuilt, derived = _shard_local_pair(idx, bo, s, cap)
+        _assert_index_equal(rebuilt, derived)
+
+
+def test_derived_local_index_uneven_and_empty_shards():
+    """Cost-balanced-style boundaries as data: uneven owned counts, an EMPTY
+    shard (own = 0 collapses the whole capacity window onto one clone row)
+    and a full-capacity shard all stay bitwise-equal to the rebuild."""
+    rng = np.random.default_rng(24)
+    n = 200
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    idx = _index(pts)
+    bo = np.array([0, 10, 10, 120, 200])  # shard 1 owns nothing
+    capo = 110  # >= max owned count, as the partitioner guarantees
+    for s in range(4):
+        rebuilt, derived = _shard_local_pair(idx, bo, s, capo)
+        _assert_index_equal(rebuilt, derived)
+
+
+def _shard_local_pair(idx, bo, r, capo):
+    """Host-side emulation of ``_object_merge_local``'s two local-tree
+    branches for shard ``r``: returns (rebuilt, derived) local indexes."""
+    from repro.core import plan as plan_mod
+
+    opos, oids, ocodes = plan_mod._pad_object_tail(idx, capo)
+    start, own = int(bo[r]), int(bo[r + 1] - bo[r])
+    opos_raw = opos[start:start + capo]
+    oids_raw = oids[start:start + capo]
+    mask = jnp.arange(capo) < own
+    clone = opos_raw[int(np.clip(own - 1, 0, capo - 1))]
+    opos_l = jnp.where(mask[:, None], opos_raw, clone[None, :])
+    oids_l = jnp.where(mask, oids_raw, -1)
+    rebuilt = plan_mod._local_index(
+        opos_l, oids_l, idx.origin, idx.side, l_max=idx.l_max,
+        th_quad=idx.th_quad,
+    )
+    codes_raw = ocodes[start:start + capo]
+    clone_code = codes_raw[int(np.clip(own - 1, 0, capo - 1))]
+    codes_l = jnp.where(mask, codes_raw, clone_code)
+    derived = plan_mod._local_index_derived(
+        idx.origin, idx.side, opos_l, oids_l, codes_l, clone_code,
+        idx.starts, jnp.int32(start), jnp.int32(own), capo,
+        l_max=idx.l_max, th_quad=idx.th_quad,
+    )
+    return rebuilt, derived
+
+
+def test_delta_shard_counts_matches_host_recount():
+    """Per-source-shard pending counts == a host bincount over the ownership
+    rule, under both the capacity rule and explicit boundaries; sentinel-N
+    padding rows are charged to no shard."""
+    from repro.core.ticks import delta_shard_counts, object_shard_of
+
+    rng = np.random.default_rng(13)
+    n = 257
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    idx = _index(pts)
+    real = rng.choice(n, 40, replace=False).astype(np.int32)
+    padded = jnp.asarray(np.concatenate([real, np.full(9, n, np.int32)]))
+    for r, bounds in ((8, None), (4, jnp.asarray([0, 30, 101, 101, 257],
+                                                 jnp.int32))):
+        got = delta_shard_counts(idx, padded, r, bounds)
+        shards = np.asarray(object_shard_of(idx, jnp.asarray(real), r, bounds))
+        np.testing.assert_array_equal(
+            np.asarray(got), np.bincount(shards, minlength=r)
+        )
+
+
+def test_shard_churn_over_budget_exact_boundary():
+    """The per-shard deferral rule is STRICT: exactly churn_budget × owned
+    movers in one shard stays incremental (mirroring the global ``<=`` rule);
+    one more defers.  Spreading the same total across shards stays under;
+    sentinel padding rows are inert."""
+    from repro.core.ticks import shard_churn_over_budget
+
+    rng = np.random.default_rng(14)
+    n, r = 64, 4  # equal rule: 16 owned per shard, budget = 4 rows each
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    idx = _index(pts)
+    by_rank = np.asarray(idx.ids).astype(np.int32)
+
+    def over(ranks):
+        ids = jnp.asarray(by_rank[np.asarray(ranks)])
+        return bool(shard_churn_over_budget(idx, ids, r, 0.25))
+
+    assert not over(range(4))          # shard 0 at exactly its budget
+    assert over(range(5))              # one past: defer
+    assert not over([0, 1, 2, 3, 16])  # same 5 movers spread over 2 shards
+    padded = jnp.asarray(np.concatenate(
+        [by_rank[:4], np.full(6, n, np.int32)]
+    ))
+    assert not bool(shard_churn_over_budget(idx, padded, r, 0.25))
+
+
+def test_session_churn_budget_exact_quarter_boundary():
+    """The session's global deferral boundary is inclusive: exactly 25% of N
+    pending splices incrementally, one row more defers to the full refresh —
+    and both land on the full-reindex bits."""
+    rng = np.random.default_rng(15)
+    n = 64
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    qpos = rng.uniform(0, SIDE, (8, 2)).astype(np.float32)
+    for m, want in ((16, "incremental"), (17, "rebuild")):
+        s = _session("incremental", pts, qpos, churn_budget=0.25)
+        s.submit().result()
+        ids = rng.choice(n, m, replace=False)
+        s.update_objects(ids, rng.uniform(0, SIDE, (m, 2)).astype(np.float32))
+        assert s.submit().result().maintenance == want, m
+        ref = reindex_objects(s.index, s._positions)
+        _assert_index_equal(s.index, ref, fields=("pos", "ids", "codes",
+                                                  "starts", "pyramid"))
+
+
+@pytest.mark.parametrize("plan", ["single", "sharded", "object_sharded",
+                                  "hybrid"])
+def test_no_motion_tick_skips_on_all_plans(plan):
+    """A clean tick statically skips the reindex on EVERY plan — the mesh
+    plans' derived local trees included — and replays the same bits."""
+    import jax
+
+    from repro.launch.mesh import default_hybrid_shape
+
+    ndev = jax.device_count()
+    mesh = (None if plan == "single"
+            else default_hybrid_shape(ndev) if plan == "hybrid" else ndev)
+    rng = np.random.default_rng(16)
+    n = 96
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    qpos = rng.uniform(0, SIDE, (16, 2)).astype(np.float32)
+    for maint in ("rebuild", "incremental"):
+        spec = ServiceSpec(
+            k=4, window=16, chunk=32, l_max=5, th_quad=8, side=SIDE,
+            plan=plan, mesh_shape=mesh, maintenance=maint,
+            churn_budget=0.25, delta_pad=16,
+        )
+        s = KnnSession(spec)
+        s.ingest_objects(pts)
+        s.register_queries(qpos)
+        assert s.submit().result().maintenance == "skip"  # fresh build
+        ids = rng.choice(n, 8, replace=False)
+        s.update_objects(ids, rng.uniform(0, SIDE, (8, 2)).astype(np.float32))
+        moved = s.submit().result()
+        assert moved.maintenance != "skip"
+        still = s.submit().result()  # no motion since
+        assert still.maintenance == "skip", (plan, maint)
+        np.testing.assert_array_equal(moved.nn_idx, still.nn_idx)
+        np.testing.assert_array_equal(moved.nn_dist, still.nn_dist)
+
+
+def test_session_per_shard_budget_defers_concentrated_churn():
+    """Movers concentrating in ONE object shard defer the whole tick to the
+    full refresh even when the global fraction is comfortably in budget; the
+    same total spread across shards splices — and either way the session
+    lands on the full-reindex bits.  Needs a real object mesh (skipped on
+    one device, where the per-shard rule degenerates to the global one)."""
+    import jax
+
+    if jax.device_count() < 2:
+        pytest.skip("per-shard budget needs an object mesh (R > 1)")
+    r = jax.device_count()
+    n = 64 * r  # equal capacity 64 per shard, per-shard budget = 16 rows
+    rng = np.random.default_rng(17)
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    qpos = rng.uniform(0, SIDE, (8, 2)).astype(np.float32)
+    cases = (
+        (np.arange(17), "rebuild"),                       # all in shard 0
+        (np.concatenate([np.arange(16), [64]]), "incremental"),  # spread
+    )
+    for ranks, want in cases:
+        s = _session("incremental", pts, qpos, plan="object_sharded",
+                     mesh_shape=r, churn_budget=0.25)
+        s.submit().result()
+        ids = np.asarray(s.index.ids)[ranks]
+        s.update_objects(
+            ids, rng.uniform(0, SIDE, (len(ids), 2)).astype(np.float32)
+        )
+        assert s.submit().result().maintenance == want, ranks
+        ref = reindex_objects(s.index, s._positions)
+        _assert_index_equal(s.index, ref, fields=("pos", "ids", "codes",
+                                                  "starts", "pyramid"))
+
+
+def test_session_drift_rebuild_reuses_spliced_order():
+    """Drift × maintenance: a low ``rebuild_factor`` fires the stage-(i)
+    z_map rebuild between ticks; under the incremental spec it reuses the
+    spliced order (``rebuild_zmap``, no fresh argsort) and must stay bitwise
+    on the rebuild session's trajectory."""
+    rng = np.random.default_rng(18)
+    n = 400
+    pts = rng.uniform(0, SIDE, (n, 2)).astype(np.float32)
+    qpos = rng.uniform(0, SIDE, (16, 2)).astype(np.float32)
+    a = _session("rebuild", pts, qpos, rebuild_factor=0.5)
+    b = _session("incremental", pts, qpos, rebuild_factor=0.5,
+                 churn_budget=0.25)
+    rebuilds = 0
+    for t in range(5):
+        ids = rng.choice(n, 20, replace=False)
+        new = rng.uniform(0, SIDE, (20, 2)).astype(np.float32)
+        a.update_objects(ids, new)
+        b.update_objects(ids, new)
+        ra, rb = a.submit().result(), b.submit().result()
+        rebuilds += bool(rb.rebuilt)
+        assert ra.maintenance == ("rebuild" if t else "skip")
+        np.testing.assert_array_equal(ra.nn_idx, rb.nn_idx, err_msg=str(t))
+        np.testing.assert_array_equal(ra.nn_dist, rb.nn_dist, err_msg=str(t))
+        _assert_index_equal(a.index, b.index)
+    assert rebuilds >= 1  # the drift trigger actually fired mid-run
 
 
 def test_validation_rejects_bad_maintenance_knobs():
